@@ -1,0 +1,39 @@
+"""Paper Fig. 5b/c: message rate — issue a batch of small puts in one epoch.
+
+The paper injects 1000 8-byte messages without sync; here one jitted epoch
+carries k puts (XLA pipelines the ppermutes), measuring per-message cost.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, time_fn
+from repro.core import rma
+from repro.core.perfmodel import DEFAULT_MODEL
+
+
+def main() -> None:
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("x",))
+    k = 256
+    x = jnp.zeros((n, k, 2), jnp.float32)  # k 8-byte messages per rank
+
+    def burst(v):
+        outs = []
+        for i in range(8):  # 8 distinct wavefronts of k/8 messages
+            outs.append(rma.put_shift(v[:, i::8], 1, "x"))
+        return jnp.concatenate(outs, axis=1)
+
+    f = jax.jit(shard_map(burst, mesh=mesh, in_specs=P("x", None, None),
+                          out_specs=P("x", None, None), check_vma=False))
+    us = time_fn(f, x)
+    per_msg = us / k
+    emit("message_rate_8B", per_msg,
+         f"tpu_model_us={DEFAULT_MODEL.p_message_rate(8)*1e6:.3f};paper_cray_ns=416")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and emits one
+CSV row per cell: name, dominant-term seconds, terms breakdown.  This ties
+the benchmark harness to the compiled-artifact analysis (deliverable g).
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.core.perfmodel import roofline_terms
+
+
+def main() -> None:
+    base = os.environ.get("DRYRUN_DIR", "results/dryrun")
+    files = sorted(glob.glob(os.path.join(base, "*.json")))
+    if not files:
+        emit("roofline_missing", 0.0, f"no dry-run artifacts under {base}")
+        return
+    for path in files:
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        t = roofline_terms(rec["hlo_flops"], rec["hlo_bytes"], rec["coll_bytes"], chips=1)
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        dom = t["dominant"]
+        emit(name, t[dom] * 1e6,
+             f"dominant={dom};compute_s={t['compute_s']:.3e};memory_s={t['memory_s']:.3e};"
+             f"collective_s={t['collective_s']:.3e};frac={t['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

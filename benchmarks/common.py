@@ -1,0 +1,27 @@
+"""Benchmark utilities: median-of-N wall timing (paper §3 methodology:
+repeat, take medians) + CSV emission `name,us_per_call,derived`."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 30, warmup: int = 3) -> float:
+    """Median wall microseconds per call of a jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.2f},{derived}", flush=True)

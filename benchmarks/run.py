@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure (see DESIGN.md §7).
+
+Each bench runs in its own subprocess with forced host devices (the main
+process keeps 1 CPU device).  Output: ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+BENCHES = [
+    # (module, devices, paper figure)
+    ("benchmarks.bench_latency", 8, "Fig 4a-c latency/bandwidth"),
+    ("benchmarks.bench_overlap", 8, "Fig 5a overlap"),
+    ("benchmarks.bench_message_rate", 8, "Fig 5b-c message rate"),
+    ("benchmarks.bench_atomics", 8, "Fig 6a atomics"),
+    ("benchmarks.bench_sync", 16, "Fig 6b-c + lock/flush constants"),
+    ("benchmarks.bench_hashtable", 8, "Fig 7a hashtable"),
+    ("benchmarks.bench_dsde", 8, "Fig 7b DSDE"),
+    ("benchmarks.bench_fft", 8, "Fig 7c 3D FFT"),
+    ("benchmarks.bench_milc", 8, "Fig 8 MILC stencil"),
+    ("benchmarks.bench_roofline", 1, "roofline from dry-run"),
+]
+
+
+def main() -> None:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod, devices, fig in BENCHES:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+        env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root + os.pathsep + env.get("PYTHONPATH", "")
+        print(f"# {mod} [{fig}] ({devices} devices)", flush=True)
+        proc = subprocess.run([sys.executable, "-m", mod], capture_output=True,
+                              text=True, env=env, cwd=root, timeout=1800)
+        if proc.returncode != 0:
+            failures += 1
+            print(f"# FAILED {mod}: {proc.stderr.strip().splitlines()[-1] if proc.stderr else '?'}",
+                  flush=True)
+        sys.stdout.write(proc.stdout)
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

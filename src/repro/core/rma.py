@@ -1,0 +1,205 @@
+"""One-sided communication functions (paper §2.4) as JAX/SPMD primitives.
+
+The paper's claim: *"communication functions map nearly directly to low-level
+hardware functions — this is a major strength of RMA programming."*  On TPU
+the same is true twice over:
+
+  * **XLA path (this module)** — inside ``shard_map``, a put to a neighbor is
+    ``lax.ppermute`` (which XLA lowers to a `collective-permute`, i.e. a
+    one-sided ICI DMA with no receiver involvement — the exact hardware
+    mechanism DMAPP exposes on Gemini).  Used by everything that runs under
+    `jit` at scale.
+  * **Pallas path (`repro.kernels.rma`)** — explicit
+    ``pltpu.make_async_remote_copy`` with per-DMA semaphores, giving
+    MPI-style *origin-controlled* timing: start ≙ MPI_Put, wait ≙
+    MPI_Win_flush.  Used by the fused overlap kernels.
+
+All functions here are pure and must be called inside ``shard_map`` (they use
+named-axis collectives).  Ranks are positions along one mesh axis.
+
+Accumulate (MPI_Accumulate / MPI-3 atomics) adaptation: TPU has no remote
+AMOs, so we use the *slotted* protocol (each origin owns a disjoint slot at
+the target, local reduction at completion) — the bufferless analogue of the
+paper's free-storage-managed matching lists; see DESIGN.md §5.4.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+Array = jax.Array
+
+
+def _axis_size(axis: str) -> int:
+    return lax.axis_size(axis)
+
+
+def rank(axis: str) -> Array:
+    """This process's rank within the window axis."""
+    return lax.axis_index(axis)
+
+
+# --------------------------------------------------------------------- put
+def put_shift(x: Array, shift: int, axis: str) -> Array:
+    """Put `x` to rank (r + shift) mod p; returns what was put *into us*.
+
+    One ICI hop for |shift|=1 on a torus axis — the common halo/ring case.
+    """
+    n = _axis_size(axis)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return lax.ppermute(x, axis, perm)
+
+
+def put_perm(x: Array, perm: Sequence[tuple[int, int]], axis: str) -> Array:
+    """Put along an arbitrary (src, dst) permutation — MPI_Put to any rank.
+
+    Ranks absent as destinations receive zeros (MPI: their window region is
+    simply not written).
+    """
+    return lax.ppermute(x, axis, list(perm))
+
+
+# --------------------------------------------------------------------- get
+def get_shift(x: Array, shift: int, axis: str) -> Array:
+    """Get from rank (r + shift) mod p.
+
+    A get *by* rank r from r+shift is a put *by* r+shift to r: under SPMD
+    both sides run the same program so the origin-passivity is preserved at
+    the target (no compute on the target's side, only its DMA engine).
+    """
+    return put_shift(x, -shift, axis)
+
+
+def get_index(x: Array, src: Array | int, axis: str) -> Array:
+    """Get rank `src`'s shard — all ranks read one rank (broadcast get)."""
+    n = _axis_size(axis)
+    full = lax.all_gather(x, axis)  # [n, ...]
+    return jax.tree.map(lambda f: lax.dynamic_index_in_dim(f, src, 0, keepdims=False), full)
+
+
+def get_gather(x: Array, src_per_rank: Array, axis: str) -> Array:
+    """Each rank gets the shard of rank ``src_per_rank[r]`` (gather-get)."""
+    full = lax.all_gather(x, axis)
+    me = lax.axis_index(axis)
+    src = src_per_rank[me]
+    return lax.dynamic_index_in_dim(full, src, 0, keepdims=False)
+
+
+# -------------------------------------------------------------- accumulate
+def accumulate_shift(
+    x: Array,
+    acc: Array,
+    shift: int,
+    axis: str,
+    op: Callable[[Array, Array], Array] = jnp.add,
+) -> Array:
+    """MPI_Accumulate to rank r+shift with reduction `op` (slotted protocol).
+
+    Returns the target-side accumulator updated with the one incoming
+    contribution.  Element-wise atomicity holds because the slot is private
+    to the origin and the reduction is applied by the owner (paper §2.4).
+    """
+    incoming = put_shift(x, shift, axis)
+    return op(acc, incoming)
+
+
+def accumulate_perm(
+    x: Array,
+    acc: Array,
+    perm: Sequence[tuple[int, int]],
+    axis: str,
+    op: Callable[[Array, Array], Array] = jnp.add,
+) -> Array:
+    incoming = put_perm(x, perm, axis)
+    return op(acc, incoming)
+
+
+def accumulate_slots(
+    contributions: Array,  # [k, ...] one slot per neighbor, zeros where unused
+    acc: Array,
+    op: Callable = jnp.add,
+) -> Array:
+    """Owner-side reduction over the slot buffer at epoch completion."""
+    return op(acc, jnp.sum(contributions, axis=0)) if op is jnp.add else functools.reduce(
+        op, [contributions[i] for i in range(contributions.shape[0])], acc
+    )
+
+
+def fetch_and_op(x: Array, target: Array, axis: str, op: Callable = jnp.add) -> tuple[Array, Array]:
+    """MPI_Fetch_and_op on the window axis (returns old value + new target).
+
+    TPU adaptation: no remote AMOs → implemented as a get followed by an
+    owner-applied op within the same epoch (serialization is provided by the
+    epoch, not a hardware lock; see DESIGN.md §5.1).
+    """
+    old = target
+    new = op(target, x)
+    return old, new
+
+
+# ------------------------------------------------------------- bulk moves
+def put_all_to_all(x: Array, axis: str, tiled: bool = False) -> Array:
+    """Personalized all-to-all built on one-sided puts (DSDE substrate §4.2).
+
+    `x` has leading dim p (one block destined per rank).
+    """
+    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=tiled)
+
+
+def put_bcast(x: Array, root: int, axis: str) -> Array:
+    """Root puts its value to everyone (window-wide broadcast)."""
+    return get_index(x, root, axis)
+
+
+# ---------------------------------------------------------- instrumentation
+class OpCounter:
+    """Counts one-sided ops issued while tracing — tests assert the paper's
+    O(k)/O(log p) message-complexity bounds against these counters."""
+
+    _active: list["OpCounter"] = []
+
+    def __init__(self) -> None:
+        self.puts = 0
+        self.gets = 0
+        self.accs = 0
+        self.colls = 0
+
+    def __enter__(self) -> "OpCounter":
+        OpCounter._active.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        OpCounter._active.remove(self)
+
+    @classmethod
+    def record(cls, kind: str, n: int = 1) -> None:
+        for c in cls._active:
+            setattr(c, kind, getattr(c, kind) + n)
+
+
+def _counted(kind: str):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **k):
+            OpCounter.record(kind)
+            return fn(*a, **k)
+        return wrapper
+    return deco
+
+
+# wrap the public ops with instrumentation
+put_shift = _counted("puts")(put_shift)
+put_perm = _counted("puts")(put_perm)
+get_shift = _counted("gets")(get_shift)
+get_index = _counted("gets")(get_index)
+get_gather = _counted("gets")(get_gather)
+accumulate_shift = _counted("accs")(accumulate_shift)
+accumulate_perm = _counted("accs")(accumulate_perm)
+put_all_to_all = _counted("colls")(put_all_to_all)
+put_bcast = _counted("colls")(put_bcast)

@@ -1,0 +1,67 @@
+"""Elastic re-meshing: shrink/regrow the device mesh after failures.
+
+Policy layer above `ckpt` + `HeartbeatMonitor`: given the surviving node
+set, pick the largest valid (data, model) mesh, and re-shard the latest
+checkpoint onto it.  TP degree is kept if possible (weights shard layouts
+stay aligned); the data axis absorbs the loss — batch is re-split, the
+deterministic pipeline recomputes shard assignments from scratch (pure
+function of (seed, step, shard)), so not a single sample is skipped or
+duplicated across the restart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.parallel.sharding import ShardingPolicy
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    data: int
+    model: int
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model
+
+
+def plan_mesh(n_devices: int, prefer_model: int) -> MeshPlan:
+    """Largest (data x model) grid with model | prefer_model, maximizing use."""
+    best = MeshPlan(1, 1)
+    model = prefer_model
+    while model >= 1:
+        data = n_devices // model
+        if data >= 1 and data * model > best.devices:
+            best = MeshPlan(data, model)
+        model //= 2
+    return best
+
+
+def elastic_restore(
+    ckpt: CheckpointManager,
+    like_tree,
+    n_surviving_devices: int,
+    prefer_model: int,
+    devices: Optional[list] = None,
+    step: Optional[int] = None,
+):
+    """Re-shard the latest checkpoint onto a mesh built from survivors.
+
+    Returns (tree, extra, mesh, policy).
+    """
+    plan = plan_mesh(n_surviving_devices, prefer_model)
+    devs = (devices or jax.devices())[: plan.devices]
+    import numpy as np
+
+    mesh = jax.sharding.Mesh(
+        np.asarray(devs).reshape(plan.data, plan.model), ("data", "model")
+    )
+    policy = ShardingPolicy(mesh=mesh)
+    shardings = policy.tree_shardings(like_tree)
+    tree, extra = ckpt.restore(like_tree, step=step, shardings=shardings)
+    return tree, extra, mesh, policy

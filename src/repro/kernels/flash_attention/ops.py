@@ -1,0 +1,44 @@
+"""jit'd wrapper with backend dispatch (compiled on TPU, interpret on CPU).
+
+The backward pass is a custom VJP through the exact-math oracle (recomputes
+attention flash-style under `jax.remat` semantics): forward runs the fused
+kernel; backward rematerializes — the standard flash-attention AD contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, block_q, block_k):
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=_interpret())
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k):
+    return _flash(q, k, v, causal, block_q, block_k), (q, k, v)
+
+
+def _flash_bwd(causal, block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: attention_ref(q, k, v, causal=causal), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 512, block_k: int = 512):
+    """[B,Hq,S,hd] x [B,Hkv,S,hd] -> [B,Hq,S,hd]."""
+    return _flash(q, k, v, causal, block_q, block_k)

@@ -1,0 +1,14 @@
+"""Oracle: unfused all-gather + matmul (what the overlap kernel must equal)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ring_matmul_ref(x_t: jax.Array, w_shard: jax.Array, axis: str) -> jax.Array:
+    """x_t [K, m] (replicated), w_shard [K/n, N] -> [m, N] in fp32."""
+    w_full = lax.all_gather(w_shard, axis)        # [n, K/n, N]
+    w_full = w_full.reshape(-1, w_shard.shape[1])  # [K, N]
+    return jnp.dot(x_t.astype(jnp.float32).T, w_full.astype(jnp.float32))

@@ -1,0 +1,19 @@
+"""jit'd wrapper with backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssm_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_t"))
+def ssm_scan(decay, drive, c, block_d: int = 256, block_t: int = 128):
+    return ssm_scan_pallas(decay, drive, c, block_d=block_d, block_t=block_t,
+                           interpret=_interpret())

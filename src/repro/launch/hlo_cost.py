@@ -1,0 +1,539 @@
+"""HLO cost extraction that is *loop-aware* — unlike `compiled.cost_analysis()`,
+which counts a `while` body once (verified: a scan over L layers reports
+1/L of the real FLOPs).  The roofline harness (deliverable g) needs true
+per-device totals, so we parse the post-optimization HLO text:
+
+  * FLOPs: dot ops (2 x prod(out) x prod(contracting)), elementwise ops inside
+    fusions, reduces; while bodies multiplied by `known_trip_count` from the
+    XLA backend_config (fallback: condition-constant heuristic).
+  * HBM bytes: operand + result bytes of top-level (post-fusion) ops only —
+    fusion internals never touch HBM, which is exactly the roofline model.
+  * Collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, trip-multiplied, with
+    replica-group size recorded so ICI and DCN axes can be separated.
+
+All values are per-device (the HLO module is the SPMD-partitioned program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# opcodes that are pure bookkeeping (no FLOPs, no HBM traffic)
+_FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    "custom-call", "rng-bit-generator", "get-dimension-size", "domain",
+    "opt-barrier", "optimization-barrier",
+}
+
+_TRANSCENDENTAL = {"exp", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "sine", "cosine", "logistic", "expm1", "log1p", "erf", "atan2"}
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result: list[Shape]           # tuple results flattened
+    operands: list[str]           # operand op names
+    attrs: str                    # raw attribute tail
+
+
+@dataclasses.dataclass
+class CollectiveRecord:
+    kind: str
+    nbytes: int                   # per execution (operand bytes)
+    trips: int                    # loop multiplier
+    group_size: int               # replica group size (participants)
+    groups: int                   # number of groups
+
+    @property
+    def total_bytes(self) -> int:
+        return self.nbytes * self.trips
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: list = dataclasses.field(default_factory=list)
+    warnings: list = dataclasses.field(default_factory=list)
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(c.total_bytes for c in self.collectives))
+
+    def collective_bytes_by_kind(self) -> dict[str, float]:
+        out: dict[str, float] = defaultdict(float)
+        for c in self.collectives:
+            out[c.kind] += c.total_bytes
+        return dict(out)
+
+    def collective_bytes_by_group_size(self) -> dict[int, float]:
+        out: dict[int, float] = defaultdict(float)
+        for c in self.collectives:
+            out[c.group_size] += c.total_bytes
+        return dict(out)
+
+
+# ---------------------------------------------------------------- parsing
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
+
+
+def _parse_shapes(type_str: str) -> list[Shape]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = tuple(int(x) for x in m.group(2).split(",") if x)
+        out.append(Shape(m.group(1), dims))
+    if not out and ("token" in type_str or "()" in type_str):
+        out.append(Shape("token", ()))
+    return out
+
+
+def _parse_operands(rest: str) -> list[str]:
+    """Operand names from the text following '<opcode>(' (balanced parens)."""
+    depth = 1
+    end = 0
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = rest[:end]
+    return re.findall(r"%([\w.\-]+)", inner)
+
+
+_ELEMENTWISE_PROP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "select", "dynamic-update-slice", "dynamic-slice", "copy", "slice",
+    "concatenate", "pad", "broadcast", "transpose", "tanh", "exponential",
+    "dot", "fusion",
+} | set(COLLECTIVES)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Op]] = {}
+        self.optypes: dict[str, list[Shape]] = {}   # global name -> result shapes
+        self.opcodes: dict[str, str] = {}
+        self._parse(text)
+        self.eff_width: dict[str, int] = {}
+        for _ in range(3):  # iterate to propagate through while-loop tuples
+            self._propagate_eff_dtypes()
+
+    def _tuple_links(self) -> dict:
+        """Map (body_param_name | while_name, index) -> init/root element name."""
+        links: dict[tuple[str, int], str] = {}
+        for comp, ops in self.computations.items():
+            for op in ops:
+                if op.opcode != "while":
+                    continue
+                m = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                if not m or m.group(1) not in self.computations:
+                    continue
+                body = self.computations[m.group(1)]
+                param = next((o.name for o in body if o.opcode == "parameter"), None)
+                init = op.operands[0] if op.operands else None
+                init_elems = None
+                root_elems = None
+                for c2ops in (self.computations.values()):
+                    for o2 in c2ops:
+                        if init and o2.name == init and o2.opcode == "tuple":
+                            init_elems = o2.operands
+                for o2 in reversed(body):
+                    if o2.opcode == "tuple":
+                        root_elems = o2.operands
+                        break
+                if param and init_elems:
+                    for i, e in enumerate(init_elems):
+                        links[(param, i)] = e
+                if root_elems:
+                    for i, e in enumerate(root_elems):
+                        links[(op.name, i)] = e
+        return links
+
+    def _propagate_eff_dtypes(self) -> None:
+        """TPU-faithful dtype widths (see module docstring note).
+
+        The CPU backend lowers bf16 dots to f32-output dots, and that f32
+        then rides through residual adds and collectives — pure lowering
+        artifact that a TPU build would not have.  We propagate an
+        *effective* width: a dot (or elementwise chain, fusion, collective)
+        whose large operands are all effectively-bf16 is charged at bf16,
+        while explicit `convert` ops keep their real target width (so
+        intentional f32 upcasts — logits, optimizer math — stay f32).
+        """
+        links = self._tuple_links()
+        for comp, ops in self.computations.items():
+            for op in ops:
+                decl = max((_DTYPE_BYTES.get(sh.dtype, 4) for sh in op.result), default=4)
+                if op.opcode == "get-tuple-element" and op.operands:
+                    mi = re.search(r"index=(\d+)", op.attrs)
+                    if mi:
+                        src = links.get((op.operands[0], int(mi.group(1))))
+                        if src is not None and src in self.eff_width:
+                            self.eff_width[op.name] = min(self.eff_width[src], decl)
+                            continue
+                if op.opcode == "convert":
+                    # jax-level casts (convert_element_type in metadata) are
+                    # intentional; backend-inserted converts (metadata names
+                    # the op they were split from, e.g. dot_general) are
+                    # lowering artifacts and propagate their operand's width
+                    m = re.search(r'op_name="[^"]*/([\w_]+)"', op.attrs)
+                    jax_op = m.group(1) if m else ""
+                    if "convert" in jax_op or not op.operands:
+                        self.eff_width[op.name] = decl
+                    else:
+                        src = op.operands[0]
+                        self.eff_width[op.name] = min(
+                            self.eff_width.get(src, decl), decl
+                        ) if self.optypes.get(src) else decl
+                    continue
+                if op.opcode in ("parameter", "constant", "iota",
+                                 "rng-bit-generator", "reduce", "reduce-window"):
+                    self.eff_width[op.name] = decl
+                    continue
+                if op.opcode == "fusion":
+                    root = self._fusion_root(op)
+                    if root is not None and root.opcode == "convert":
+                        m = re.search(r'op_name="[^"]*/([\w_]+)"', op.attrs)
+                        jax_op = m.group(1) if m else ""
+                        if "convert" in jax_op:
+                            self.eff_width[op.name] = decl
+                            continue
+                        # backend convert fusion: propagate operand width
+                if op.opcode in _ELEMENTWISE_PROP or op.opcode == "get-tuple-element":
+                    widths = []
+                    for o in op.operands:
+                        shapes = self.optypes.get(o)
+                        if not shapes:
+                            continue
+                        if max((sh.size for sh in shapes), default=0) < 1024:
+                            continue  # scalars/indices don't set precision
+                        widths.append(self.eff_width.get(o,
+                                      max(_DTYPE_BYTES.get(sh.dtype, 4) for sh in shapes)))
+                    eff = max(widths) if widths else decl
+                    self.eff_width[op.name] = min(eff, decl)
+                else:
+                    self.eff_width[op.name] = decl
+
+    def _eff_bytes(self, name: str) -> int:
+        shapes = self.optypes.get(name)
+        if not shapes:
+            return 0
+        w = self.eff_width.get(name)
+        total = 0
+        for sh in shapes:
+            decl = _DTYPE_BYTES.get(sh.dtype, 4)
+            total += sh.size * (min(w, decl) if w else decl)
+        return total
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        ops: list[Op] = []
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR_RE.match(line.strip())
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(1)
+                    ops = []
+                continue
+            if line.strip() == "}":
+                self.computations[cur] = ops
+                cur = None
+                continue
+            m = _OPLINE_RE.match(line)
+            if not m:
+                continue
+            name, type_str, opcode, rest = m.groups()
+            # tuple types keep their parens inside type_str; opcode regex can
+            # mis-split on e.g. "(s32[], f32[2])" — detect by checking opcode
+            if opcode in _DTYPE_BYTES:
+                continue
+            shapes = _parse_shapes(type_str)
+            operands = _parse_operands(rest)
+            op = Op(name, opcode, shapes, operands, rest)
+            ops.append(op)
+            self.optypes[name] = shapes
+        if cur is not None:
+            self.computations[cur] = ops
+
+    # ------------------------------------------------------------- costs
+    def _trip_count(self, op: Op) -> tuple[int, Optional[str]]:
+        m = re.search(r'known_trip_count[^\d]+(\d+)', op.attrs)
+        if m:
+            return int(m.group(1)), None
+        # fallback: constant in the condition computation compared with LT
+        m = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+        if m and m.group(1) in self.computations:
+            for cop in self.computations[m.group(1)]:
+                if cop.opcode == "constant":
+                    cm = re.search(r"constant\((\d+)\)", "constant(" + cop.attrs)
+                    if cm:
+                        return int(cm.group(1)), None
+        return 1, f"while {op.name}: unknown trip count, assuming 1"
+
+    def _dot_flops(self, op: Op) -> float:
+        out = op.result[0]
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+        lhs_shapes = self.optypes.get(op.operands[0])
+        if not m or not lhs_shapes:
+            return 2.0 * out.size
+        lhs = lhs_shapes[0]
+        contract = 1
+        for d in (int(x) for x in m.group(1).split(",") if x):
+            if d < len(lhs.dims):
+                contract *= lhs.dims[d]
+        return 2.0 * out.size * contract
+
+    def _conv_flops(self, op: Op) -> float:
+        out = op.result[0]
+        rhs_shapes = self.optypes.get(op.operands[1]) if len(op.operands) > 1 else None
+        k = rhs_shapes[0].size if rhs_shapes else 1
+        out_feat = out.dims[-1] if out.dims else 1
+        return 2.0 * out.size * (k / max(out_feat, 1))
+
+    def _fusion_root(self, op: Op) -> Optional["Op"]:
+        m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+        if not m or m.group(1) not in self.computations:
+            return None
+        ops = self.computations[m.group(1)]
+        for o in reversed(ops):
+            return o
+        return None
+
+    def _fusion_is_dus(self, op: Op) -> bool:
+        """Fusion whose output region is a dynamic-update-slice (in-place)."""
+        m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+        if not m or m.group(1) not in self.computations:
+            return False
+        res = op.result[0].dims if op.result else ()
+        for o in self.computations[m.group(1)]:
+            if o.opcode == "dynamic-update-slice" and o.result and o.result[0].dims == res:
+                return True
+        return False
+
+    def _fusion_operand_bytes(self, op: Op) -> int:
+        """Fusion operand traffic; operands that are only dynamic-sliced
+        inside the fusion are charged at the slice size, not the whole
+        buffer (a scan-stacked [L, ...] residual read once per layer was
+        otherwise charged L times over)."""
+        m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+        comp = self.computations.get(m.group(1)) if m else None
+        if comp is None:
+            return self._operand_bytes(op)
+        params = [o for o in comp if o.opcode == "parameter"]
+        by_idx = {}
+        for pop in params:
+            mi = re.search(r"parameter\((\d+)", "parameter(" + pop.attrs)
+            idx = int(mi.group(1)) if mi else len(by_idx)
+            by_idx[idx] = pop.name
+        # param -> sizes of dynamic-slice results that consume it
+        slice_only: dict[str, int] = {}
+        consumers: dict[str, list[Op]] = {}
+        for o in comp:
+            for q in o.operands:
+                consumers.setdefault(q, []).append(o)
+        total = 0
+        for i, oname in enumerate(op.operands):
+            full = self._eff_bytes(oname)
+            pname = by_idx.get(i)
+            cons = consumers.get(pname, []) if pname else []
+            if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                total += sum(
+                    min(self._eff_bytes(c.name) or sum(x.nbytes for x in c.result), full)
+                    for c in cons
+                ) or full
+            else:
+                total += full
+        return total
+
+    def _dus_bytes(self, op: Op) -> int:
+        """In-place dynamic-update-slice: traffic = 2 x update region (+idx).
+
+        Charging the whole buffer per step made scan output-stacking look
+        like (trip x buffer) traffic — 25 TB phantom bytes on an 80-layer
+        model (see EXPERIMENTS.md §Perf accounting note).
+        """
+        res = self._result_bytes(op)
+        cands = [b for b in (self._eff_bytes(o) for o in op.operands) if 0 < b < res]
+        upd = max(cands) if cands else res
+        return 2 * upd
+
+    def _operand_bytes(self, op: Op) -> int:
+        return sum(self._eff_bytes(o) for o in op.operands)
+
+    def _result_bytes(self, op: Op) -> int:
+        w = self.eff_width.get(op.name)
+        total = 0
+        for sh in op.result:
+            decl = _DTYPE_BYTES.get(sh.dtype, 4)
+            total += sh.size * (min(w, decl) if w else decl)
+        return total
+
+    def comp_cost(self, comp: str, trips: int, summary: CostSummary,
+                  _depth: int = 0) -> None:
+        if _depth > 50 or comp not in self.computations:
+            return
+        for op in self.computations[comp]:
+            oc = op.opcode
+            if oc in _FREE:
+                continue
+            if oc == "while":
+                n, warn = self._trip_count(op)
+                if warn:
+                    summary.warnings.append(warn)
+                m = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                if m:
+                    self.comp_cost(m.group(1), trips * n, summary, _depth + 1)
+                continue
+            if oc == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if m:
+                    self._fusion_flops(m.group(1), trips, summary, _depth + 1)
+                if self._fusion_is_dus(op):
+                    summary.hbm_bytes += trips * self._dus_bytes(op)
+                else:
+                    summary.hbm_bytes += trips * (
+                        self._fusion_operand_bytes(op) + self._result_bytes(op)
+                    )
+                continue
+            if oc == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w.\-]+)|false_computation=%?([\w.\-]+))", op.attrs):
+                    names = [g for g in m.groups() if g]
+                    for blob in names:
+                        for nm in re.findall(r"%?([\w.\-]+)", blob):
+                            self.comp_cost(nm, trips, summary, _depth + 1)
+                continue
+            if oc in ("call", "async-start"):
+                m = re.search(r"to_apply=%?([\w.\-]+)|calls=%?([\w.\-]+)", op.attrs)
+                if m:
+                    self.comp_cost(next(g for g in m.groups() if g), trips, summary, _depth + 1)
+                continue
+            if any(oc.startswith(c) for c in COLLECTIVES):
+                nbytes = self._operand_bytes(op)
+                gs, ng = _replica_group_info(op.attrs)
+                summary.collectives.append(
+                    CollectiveRecord(_coll_kind(oc), nbytes, trips, gs, ng)
+                )
+                summary.hbm_bytes += trips * (self._operand_bytes(op) + self._result_bytes(op))
+                continue
+            # regular op
+            if oc == "dynamic-update-slice":
+                summary.hbm_bytes += trips * self._dus_bytes(op)
+                continue
+            if oc == "dynamic-slice":
+                summary.hbm_bytes += trips * 2 * self._result_bytes(op)
+                continue
+            if oc == "dot":
+                summary.flops += trips * self._dot_flops(op)
+            elif oc == "convolution":
+                summary.flops += trips * self._conv_flops(op)
+            elif oc in ("reduce", "reduce-window"):
+                summary.flops += trips * sum(
+                    s.nbytes // max(_DTYPE_BYTES.get(s.dtype, 4), 1)
+                    for o in op.operands[:1]
+                    for s in (self.optypes.get(o) or [])
+                )
+            elif oc in ("sort",):
+                n = self._result_bytes(op) // 4
+                summary.flops += trips * n * max(n.bit_length(), 1)
+            else:
+                # elementwise-ish
+                w = 3.0 if oc in _TRANSCENDENTAL else 1.0
+                summary.flops += trips * w * op.result[0].size if op.result else 0.0
+            summary.hbm_bytes += trips * (self._operand_bytes(op) + self._result_bytes(op))
+
+    def _fusion_flops(self, comp: str, trips: int, summary: CostSummary, _depth: int) -> None:
+        """FLOPs (only) of a fused computation — bytes stay at fusion boundary."""
+        if _depth > 50 or comp not in self.computations:
+            return
+        for op in self.computations[comp]:
+            oc = op.opcode
+            if oc in _FREE or not op.result:
+                continue
+            if oc == "dot":
+                summary.flops += trips * self._dot_flops(op)
+            elif oc == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if m:
+                    self._fusion_flops(m.group(1), trips, summary, _depth + 1)
+            elif oc in ("reduce",):
+                ob = self.optypes.get(op.operands[0]) if op.operands else None
+                summary.flops += trips * (ob[0].size if ob else op.result[0].size)
+            else:
+                w = 3.0 if oc in _TRANSCENDENTAL else 1.0
+                summary.flops += trips * w * op.result[0].size
+
+
+def _coll_kind(opcode: str) -> str:
+    for c in COLLECTIVES:
+        if opcode.startswith(c):
+            return c
+    return opcode
+
+
+def _replica_group_info(attrs: str) -> tuple[int, int]:
+    """(group_size, n_groups) from replica_groups=[G,S]<=[...] or {{...}}."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2)), int(m.group(1))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        size = len([x for x in m.group(1).split(",") if x.strip()])
+        ng = attrs.count("{") - 1
+        return max(size, 1), max(ng, 1)
+    return 1, 1
+
+
+def analyze(hlo_text: str, entry: Optional[str] = None) -> CostSummary:
+    """Loop-aware per-device cost summary of a compiled HLO module."""
+    mod = HloModule(hlo_text)
+    if entry is None:
+        # ENTRY computation: the one named in "ENTRY %name" line
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+        entry = m.group(1) if m else next(iter(mod.computations))
+    summary = CostSummary()
+    mod.comp_cost(entry, 1, summary)
+    return summary

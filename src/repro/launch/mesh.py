@@ -1,0 +1,28 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A function (not a module constant) so importing never touches jax device
+state — smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever devices exist (tests/examples on forced-host CPUs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def chips_in(mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n

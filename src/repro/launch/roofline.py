@@ -1,0 +1,104 @@
+"""Roofline report generator (deliverable g).
+
+Reads the dry-run artifacts and emits the EXPERIMENTS.md tables: the three
+roofline terms per (arch x shape x mesh), dominant bottleneck, MODEL_FLOPS
+(6*N*D train / 2*N*D inference, N_active for MoE) vs HLO_FLOPs ratio, and a
+one-line "what would move the dominant term" analysis.
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun --md
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.core.perfmodel import V5E, roofline_terms
+
+
+def model_flops_total(arch: str, shape_name: str) -> float:
+    """Whole-step useful FLOPs: 6ND train, 2ND prefill, 2ND/token decode."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params() if cfg.moe_experts else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def advice(rec: dict, terms: dict) -> str:
+    dom = terms["dominant"]
+    if dom == "compute_s":
+        ratio = rec.get("_mf_ratio", 1.0)
+        if ratio < 0.5:
+            return "compute-bound but <50% useful: cut replicated/remat FLOPs (sharding or remat policy)"
+        return "near compute roofline: only kernel-level MXU utilization is left"
+    if dom == "memory_s":
+        return ("HBM-bound: fuse attention/scan (Pallas kernels), drop f32 intermediates "
+                "to bf16, reduce remat re-reads")
+    return ("collective-bound: reshard to cut all-gather/all-to-all volume, "
+            "hierarchical schedule, overlap with compute (ring_matmul kernel)")
+
+
+def load(dirname: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        rec = json.load(open(path))
+        recs.append(rec)
+    return recs
+
+
+def fmt_row(rec: dict) -> str | None:
+    if rec.get("status") == "skipped":
+        return (f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | — | — | — | — | — | "
+                f"skipped: {rec['reason'][:40]} |")
+    if rec.get("status") != "ok":
+        return f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | FAILED | | | | | {rec.get('error','')[:60]} |"
+    chips = rec["chips"]
+    # hlo_* are per-device; roofline formula expects per-chip normalization, so chips=1
+    t = roofline_terms(rec["hlo_flops"], rec["hlo_bytes"], rec["coll_bytes"], chips=1)
+    mf = model_flops_total(rec["arch"], rec["shape"]) / chips
+    ratio = mf / max(rec["hlo_flops"], 1.0)
+    rec["_mf_ratio"] = ratio
+    dom = t["dominant"].replace("_s", "")
+    return (
+        f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+        f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} | {t['collective_s']:.3e} "
+        f"| **{dom}** | {ratio:.3f} | {advice(rec, t)[:80]} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+    "| dominant | 6ND/HLO | to move the dominant term |\n"
+    "|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+
+    recs = load(args.dir)
+    if args.mesh:
+        recs = [r for r in recs if r.get("mesh") == args.mesh]
+    print(HEADER)
+    for rec in recs:
+        row = fmt_row(rec)
+        if row:
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Architecture zoo: scan-based pure-JAX model definitions."""
+
+from . import layers, mamba, moe, registry, transformer, xlstm
+from .registry import Model, build_model

@@ -1,0 +1,134 @@
+"""Mamba (selective SSM) block — parallel associative-scan training form and
+recurrent decode form (Jamba's sequence mixer).
+
+Recurrence (per channel c, state dim N):
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t
+    y_t = C_t . h_t + D x_t
+trained with `lax.associative_scan` over time (linear in S — this is what
+makes jamba/long_500k sub-quadratic), decoded with an O(1) state update.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard
+
+Array = jax.Array
+
+
+def init_mamba(rng, d_model: int, expand: int = 2, state_dim: int = 16,
+               conv_width: int = 4, dtype=jnp.bfloat16) -> dict:
+    di = expand * d_model
+    dt_rank = max(d_model // 16, 1)
+    ks = jax.random.split(rng, 5)
+    s = 1.0 / math.sqrt(d_model)
+    si = 1.0 / math.sqrt(di)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, state_dim + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d_model, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, di)) * si).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, dt_rank + 2 * state_dim)) * si).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, di)) / math.sqrt(dt_rank)).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(dtype),  # softplus^-1
+        "A_log": jnp.log(A),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d_model)) * si).astype(dtype),
+    }
+
+
+def _ssm_inputs(params: dict, xz: Array, conv_state: Array | None):
+    """Shared front half: conv + projections.  xz [B,S,2di] -> (x, z, dt, Bm, Cm).
+
+    `conv_state` [B, W-1, di] seeds the causal conv window (zeros = fresh);
+    the returned conv state is the trailing window of raw inputs.
+    """
+    di = params["conv_w"].shape[1]
+    x, z = xz[..., :di], xz[..., di:]
+    W = params["conv_w"].shape[0]
+    S = x.shape[1]
+    if conv_state is None:
+        prefix = jnp.zeros((x.shape[0], W - 1, di), x.dtype)
+    else:
+        prefix = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)                # [B, S+W-1, di]
+    new_conv_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros((x.shape[0], 0, di), x.dtype)
+    x = sum(xp[:, i : i + S] * params["conv_w"][i] for i in range(W))
+    x = jax.nn.silu(x + params["conv_b"])
+
+    proj = jnp.einsum("bsd,de->bse", x, params["x_proj"])
+    N = (proj.shape[-1] - params["dt_proj"].shape[0]) // 2
+    dtr = proj[..., : params["dt_proj"].shape[0]]
+    Bm = proj[..., -2 * N : -N].astype(jnp.float32)          # [B,S,N]
+    Cm = proj[..., -N:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dtr, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )                                                        # [B,S,di]
+    return x, z, dt, Bm, Cm, new_conv_state
+
+
+def mamba_prefill(params: dict, xin: Array, state: dict | None):
+    """[B,S,D] -> ([B,S,D], new_state) via parallel associative scan.
+
+    With `state` the scan is seeded by h0/conv (chunked prefill); without,
+    fresh zeros (training) and no state is returned.
+    """
+    xz = jnp.einsum("bsd,de->bse", xin, params["in_proj"])
+    xz = shard(xz, "act_btf")
+    x, z, dt, Bm, Cm, conv_out = _ssm_inputs(params, xz, state["conv"] if state else None)
+
+    A = -jnp.exp(params["A_log"])                            # [di,N]
+    decay = jnp.exp(dt[..., None] * A)                       # [B,S,di,N]
+    drive = (dt * x.astype(jnp.float32))[..., None] * Bm[:, :, None, :]  # [B,S,di,N]
+
+    def combine(a, b):
+        (da, ua), (db, ub) = a, b
+        return da * db, ua * db + ub
+
+    d_cum, h = lax.associative_scan(combine, (decay, drive), axis=1)
+    if state is not None:
+        h = h + d_cum * state["h"][:, None]
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cm)                   # [B,S,di]
+    h_last = h[:, -1]
+    y = y + params["D_skip"] * x.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xin.dtype)
+    out = shard(jnp.einsum("bse,ed->bsd", y, params["out_proj"]), "act_btd")
+    new_state = {"h": h_last, "conv": conv_out} if state is not None else None
+    return out, new_state
+
+
+def mamba_forward(params: dict, xin: Array) -> Array:
+    """Training: [B,S,D] -> [B,S,D] (stateless)."""
+    return mamba_prefill(params, xin, None)[0]
+
+
+def init_mamba_state(batch: int, d_model: int, expand: int, state_dim: int,
+                     conv_width: int, dtype=jnp.bfloat16) -> dict:
+    di = expand * d_model
+    return {
+        "h": jnp.zeros((batch, di, state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, di), dtype),
+    }
+
+
+def mamba_decode(params: dict, xin: Array, state: dict) -> tuple[Array, dict]:
+    """One-token step: xin [B,1,D] -> ([B,1,D], new state)."""
+    xz = jnp.einsum("bsd,de->bse", xin, params["in_proj"])
+    x, z, dt, Bm, Cm, conv = _ssm_inputs(params, xz, state["conv"])
+
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt[:, 0, :, None] * A)                   # [B,di,N]
+    drive = (dt[:, 0] * x[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = state["h"] * decay + drive
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])
+    y = y + params["D_skip"] * x[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(xin.dtype)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None]
+    return out, {"h": h, "conv": conv}

@@ -1,0 +1,165 @@
+"""Mixture-of-Experts FFN with sort-based, capacity-bounded dispatch.
+
+Expert parallelism is the paper's **DSDE motif** (§4.2): tokens are items,
+experts are targets, and no rank knows its receive volume in advance.  The
+dispatch below is the SPMD formulation of `repro.core.dsde`: tokens are
+bucketed into per-expert slot ranges (the slotted one-sided accumulate) and a
+sharding constraint moves the expert dimension onto the `model` axis — GSPMD
+lowers that reshard to exactly the all-to-all of one-sided puts that the
+DSDE protocol issues.  `examples/moe_dsde.py` runs the explicit shard_map
+version over `core.dsde` to show they agree.
+
+**Grouped dispatch** (perf-critical, see EXPERIMENTS.md §Perf/qwen3): tokens
+are first reshaped to [G, T/G, D] where G matches the data-parallel shard
+count, and every scatter/gather carries the group dimension.  Each group's
+slot buffer is then built entirely inside one data shard, so GSPMD lowers
+the expert reshard to an all-to-all of the slot ranges (~84 MB/device for
+qwen3 train_4k) instead of an all-reduce of the *entire* dispatch buffer
+(~43 GB/layer — the ungrouped formulation measured 23 TB/device/step of
+all-reduce traffic).
+
+Capacity drops (`pos_in_expert >= capacity`) are the paper's bounded-buffer
+semantics; dropped tokens fall through on the residual path (standard
+GShard/Switch behavior).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import _dp, current_policy, shard_spec
+
+Array = jax.Array
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: Array        # load-balance loss (Switch-style)
+    router_z_loss: Array
+    drop_fraction: Array
+
+
+def init_moe(rng, d_model: int, n_experts: int, d_ff: int, mlp_type: str = "swiglu",
+             shared_ff: int = 0, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(rng, 5)
+    s_in, s_out = 1.0 / math.sqrt(d_model), 1.0 / math.sqrt(d_ff)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, n_experts)) * s_in).astype(jnp.float32),
+        "experts": {
+            "w_in": (jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * s_in).astype(dtype),
+            "w_out": (jax.random.normal(ks[2], (n_experts, d_ff, d_model)) * s_out).astype(dtype),
+        },
+    }
+    if mlp_type == "swiglu":
+        p["experts"]["w_gate"] = (
+            jax.random.normal(ks[3], (n_experts, d_model, d_ff)) * s_in
+        ).astype(dtype)
+    if shared_ff:
+        from .layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], d_model, shared_ff, mlp_type, dtype)
+    return p
+
+
+def _n_groups(B: int) -> int:
+    """Dispatch groups = data shards when a policy is active (else 1)."""
+    pol = current_policy()
+    if pol is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data"):
+        g *= pol.mesh.shape.get(ax, 1)
+    while g > 1 and B % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_ffn(
+    params: dict,
+    x: Array,                 # [B, S, D]
+    top_k: int,
+    capacity_factor: float = 1.25,
+    mlp_type: str = "swiglu",
+) -> tuple[Array, MoEMetrics]:
+    B, S, D = x.shape
+    E = params["router"].shape[1]
+    G = _n_groups(B)
+    Tg = (B // G) * S          # tokens per group
+    pol = current_policy()
+    dp = _dp(pol.mesh) if pol is not None else None
+    xt = x.reshape(G, Tg, D)
+    xt = shard_spec(xt, P(dp, None, None))
+
+    # ---- routing (grouped)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)           # [G, Tg, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (global)
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((E,)).at[expert_idx.reshape(-1)].add(1.0) / (G * Tg * top_k)
+    aux = E * jnp.sum(me * ce)
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- sort-based dispatch per group (DSDE packing, §4.2)
+    cap = max(int(capacity_factor * Tg * top_k / E), 4)
+    n_slots = E * cap
+
+    def pack(xt_g, eidx_g, gate_g):
+        flat_e = eidx_g.reshape(-1)                               # [Tg*k]
+        flat_g = gate_g.reshape(-1)
+        flat_src = jnp.repeat(jnp.arange(Tg), top_k)
+        order = jnp.argsort(flat_e, stable=True)
+        s_e, s_g, s_src = flat_e[order], flat_g[order], flat_src[order]
+        pos = jnp.arange(Tg * top_k) - jnp.searchsorted(s_e, s_e, side="left")
+        ok = pos < cap
+        slot = jnp.where(ok, s_e * cap + pos, n_slots)            # overflow -> drop
+        disp = jnp.zeros((n_slots, D), xt_g.dtype).at[slot].set(xt_g[s_src], mode="drop")
+        meta = {
+            "slot": slot, "src": s_src, "gate": s_g, "ok": ok,
+        }
+        return disp.reshape(E, cap, D), meta
+
+    disp, meta = jax.vmap(pack)(xt, expert_idx, gate_vals)        # [G, E, cap, D]
+    drop = 1.0 - jnp.mean(meta["ok"])
+    # EP reshard: experts onto `model` (GSPMD -> all-to-all of slot ranges)
+    disp = shard_spec(disp, P(dp, "model", None, None))
+
+    # ---- expert FFN (E over model; groups over data)
+    h = jnp.einsum("gecd,edf->gecf", disp, params["experts"]["w_in"])
+    if mlp_type == "swiglu":
+        g = jnp.einsum("gecd,edf->gecf", disp, params["experts"]["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("gecf,efd->gecd", h, params["experts"]["w_out"])
+    out = shard_spec(out, P(dp, "model", None, None))
+
+    # ---- combine per group (return trip + gate-weighted scatter-add)
+    def combine(out_g, meta_g):
+        flat = out_g.reshape(n_slots, D)
+        got = flat[jnp.minimum(meta_g["slot"], n_slots - 1)]
+        contrib = jnp.zeros((Tg, D), jnp.float32).at[
+            jnp.where(meta_g["ok"], meta_g["src"], Tg)
+        ].add(
+            jnp.where(meta_g["ok"][:, None],
+                      got.astype(jnp.float32) * meta_g["gate"][:, None], 0.0),
+            mode="drop",
+        )
+        return contrib
+
+    y = jax.vmap(combine)(out, meta)                              # [G, Tg, D]
+    y = shard_spec(y, P(dp, None, None))
+    y = y.astype(x.dtype).reshape(B, S, D)
+
+    if "shared" in params:
+        from .layers import mlp
+
+        y = y + mlp(params["shared"], x, mlp_type)
+
+    return y, MoEMetrics(aux, zloss, drop)

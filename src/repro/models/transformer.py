@@ -1,0 +1,420 @@
+"""Unified LM: one scan-based decoder covering all assigned families.
+
+Families map to a *period* structure consumed by ``lax.scan`` (HLO size is
+independent of depth — essential for compiling 80-layer configs on CPU):
+
+  dense / vlm / moe : period = 1 layer, stacked [L, ...]
+  hybrid (jamba)    : period = `attn_period` layers (1 attn + rest mamba,
+                      channel mixer alternating dense/MoE per `moe_every`)
+  ssm (xlstm)       : period = `slstm_period` blocks (period-1 mLSTM + 1 sLSTM)
+  audio (whisper)   : encoder stack + decoder stack with cross-attention
+
+`forward(..., cache=None)` is training; passing a cache makes the same code
+path do prefill (S tokens into an empty cache) and decode (S=1) — the cache
+is threaded through the scan as per-layer xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import shard
+
+from . import layers as L
+from . import mamba as M
+from . import moe as X
+from . import xlstm as XL
+
+Array = jax.Array
+
+# when True, per-layer scan bodies are rematerialized (activation checkpointing)
+_REMAT: list[bool] = [False]
+
+
+def set_remat(flag: bool) -> None:
+    _REMAT[0] = flag
+
+
+def _maybe_remat(body):
+    if _REMAT[0]:
+        return jax.checkpoint(body, prevent_cse=False)
+    return body
+
+
+class ForwardOut(NamedTuple):
+    logits: Array
+    cache: Any
+    aux_loss: Array
+    z_loss: Array
+
+
+# ============================================================ init
+def _init_attn_layer(rng, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qkv_bias),
+    }
+
+
+def _init_ffn(rng, cfg: ArchConfig, is_moe: bool) -> dict:
+    if is_moe:
+        return {
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "moe": X.init_moe(rng, cfg.d_model, cfg.moe_experts, cfg.moe_d_ff,
+                              cfg.mlp_type, cfg.moe_shared_ff),
+        }
+    return {"ln2": L.init_rmsnorm(cfg.d_model), "mlp": L.init_mlp(rng, cfg.d_model, cfg.d_ff, cfg.mlp_type)}
+
+
+def _stack(rngs, init_fn):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[init_fn(r) for r in rngs])
+
+
+def init_lm(rng, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(rng, 8)
+    params: dict = {"tok": L.init_embed(ks[0], cfg.vocab_size, cfg.d_model, cfg.tie_embeddings)}
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model)
+
+    if cfg.family in ("dense", "vlm"):
+        rngs = jax.random.split(ks[1], cfg.n_layers)
+        params["blocks"] = _stack(
+            rngs, lambda r: {**_init_attn_layer(r, cfg), **_init_ffn(jax.random.fold_in(r, 1), cfg, False)}
+        )
+    elif cfg.family == "moe":
+        rngs = jax.random.split(ks[1], cfg.n_layers)
+        params["blocks"] = _stack(
+            rngs, lambda r: {**_init_attn_layer(r, cfg), **_init_ffn(jax.random.fold_in(r, 1), cfg, True)}
+        )
+    elif cfg.family == "hybrid":
+        period = cfg.attn_period
+        n_p = cfg.n_layers // period
+        n_mamba = period - 1
+        n_moe = sum(1 for j in range(period) if j % cfg.moe_every == cfg.moe_every - 1)
+
+        def init_period(r):
+            rs = jax.random.split(r, 4)
+            mamba_rngs = jax.random.split(rs[0], n_mamba)
+            moe_rngs = jax.random.split(rs[1], n_moe)
+            mlp_rngs = jax.random.split(rs[2], period - n_moe)
+            return {
+                "attn": _init_attn_layer(rs[3], cfg),
+                "mamba": _stack(mamba_rngs, lambda q: {
+                    "ln1": L.init_rmsnorm(cfg.d_model),
+                    "mix": M.init_mamba(q, cfg.d_model, cfg.ssm_expand, cfg.ssm_state_dim, cfg.ssm_conv_width),
+                }),
+                "moe": _stack(moe_rngs, lambda q: _init_ffn(q, cfg, True)),
+                "mlp": _stack(mlp_rngs, lambda q: _init_ffn(q, cfg, False)),
+            }
+
+        params["periods"] = _stack(jax.random.split(ks[1], n_p), init_period)
+    elif cfg.family == "ssm":  # xlstm
+        period = cfg.slstm_period
+        n_p = cfg.n_layers // period
+
+        def init_period(r):
+            rs = jax.random.split(r, 2)
+            m_rngs = jax.random.split(rs[0], period - 1)
+            return {
+                "mlstm": _stack(m_rngs, lambda q: {
+                    "ln1": L.init_rmsnorm(cfg.d_model),
+                    "mix": XL.init_mlstm(q, cfg.d_model, cfg.n_heads),
+                }),
+                "slstm": {
+                    "ln1": L.init_rmsnorm(cfg.d_model),
+                    "mix": XL.init_slstm(rs[1], cfg.d_model, cfg.n_heads),
+                },
+            }
+
+        params["periods"] = _stack(jax.random.split(ks[1], n_p), init_period)
+    elif cfg.family == "audio":  # whisper enc-dec
+        enc_rngs = jax.random.split(ks[1], cfg.encoder_layers)
+        dec_rngs = jax.random.split(ks[2], cfg.n_layers)
+        params["enc_blocks"] = _stack(
+            enc_rngs, lambda r: {**_init_attn_layer(r, cfg), **_init_ffn(jax.random.fold_in(r, 1), cfg, False)}
+        )
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+        params["enc_pos"] = (jax.random.normal(ks[3], (cfg.encoder_seq, cfg.d_model)) * 0.01).astype(jnp.bfloat16)
+
+        def init_dec(r):
+            r1, r2, r3 = jax.random.split(r, 3)
+            return {
+                **_init_attn_layer(r1, cfg),
+                "ln_x": L.init_rmsnorm(cfg.d_model),
+                "xattn": L.init_attention(r2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+                **_init_ffn(r3, cfg, False),
+            }
+
+        params["blocks"] = _stack(dec_rngs, init_dec)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return params
+
+
+# ============================================================ caches
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    """Decode cache pytree (stacked per scan period)."""
+    def kv(n_layers):
+        return {
+            "k": jnp.zeros((n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+            "v": jnp.zeros((n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+        }
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"kv": kv(cfg.n_layers), "len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        n_p = cfg.n_layers // cfg.attn_period
+        n_m = cfg.attn_period - 1
+        st = M.init_mamba_state(batch, cfg.d_model, cfg.ssm_expand, cfg.ssm_state_dim, cfg.ssm_conv_width)
+        return {
+            "kv": kv(n_p),
+            "mamba": jax.tree.map(lambda x: jnp.broadcast_to(x, (n_p, n_m) + x.shape), st),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        n_p = cfg.n_layers // cfg.slstm_period
+        ms = XL.init_mlstm_state(batch, cfg.d_model, cfg.n_heads)
+        ss = XL.init_slstm_state(batch, cfg.d_model)
+        return {
+            "mlstm": jax.tree.map(lambda x: jnp.broadcast_to(x, (n_p, cfg.slstm_period - 1) + x.shape), ms),
+            "slstm": jax.tree.map(lambda x: jnp.broadcast_to(x, (n_p,) + x.shape), ss),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "kv": kv(cfg.n_layers),
+            "enc_out": jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+# ============================================================ forward
+def _attn_block(cfg, blk, h, positions, cache_kv, cache_len, cross_kv=None):
+    """One attention (or cross-attention) residual branch."""
+    cache = None
+    if cache_kv is not None:
+        cache = {"k": cache_kv["k"], "v": cache_kv["v"], "len": cache_len}
+    y, new_cache = L.attention(
+        blk["attn"], L.rmsnorm(h, blk["ln1"]["scale"], cfg.norm_eps),
+        positions, cfg.rope_style, causal=True, cache=cache,
+    )
+    h = h + y
+    if cross_kv is not None:
+        yx, _ = L.attention(
+            blk["xattn"], L.rmsnorm(h, blk["ln_x"]["scale"], cfg.norm_eps),
+            positions, "none", causal=False, cross_kv=cross_kv,
+        )
+        h = h + yx
+    kv_out = {"k": new_cache["k"], "v": new_cache["v"]} if new_cache else None
+    return h, kv_out
+
+
+def _ffn_block(cfg, blk, h):
+    """Channel mixer; returns (h, aux, z)."""
+    xn = L.rmsnorm(h, blk["ln2"]["scale"], cfg.norm_eps)
+    if "moe" in blk:
+        y, met = X.moe_ffn(blk["moe"], xn, cfg.moe_top_k, mlp_type=cfg.mlp_type)
+        return h + y, met.aux_loss, met.router_z_loss
+    return h + L.mlp(blk["mlp"], xn, cfg.mlp_type), jnp.zeros(()), jnp.zeros(())
+
+
+def forward(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: Array,                    # [B, S]
+    cache: Optional[dict] = None,
+    prefix_embeds: Optional[Array] = None,   # vlm patches / audio frames [B, P, D]
+) -> ForwardOut:
+    B, S = tokens.shape
+    h = L.embed(params["tok"], tokens)
+    if prefix_embeds is not None and cfg.family == "vlm":
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+        S = h.shape[1]
+    start = cache["len"] if cache is not None else jnp.int32(0)
+    positions = start + jnp.arange(S)[None, :] + jnp.zeros((B, 1), jnp.int32)
+
+    aux = jnp.zeros(())
+    zl = jnp.zeros(())
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        kv_in = cache["kv"] if cache is not None else None
+
+        def body(carry, xs):
+            h, aux, zl = carry
+            blk, kv = xs
+            h, kv_out = _attn_block(cfg, blk, h, positions, kv, start)
+            h, a, z = _ffn_block(cfg, blk, h)
+            return (h, aux + a, zl + z), kv_out
+
+        (h, aux, zl), kv_out = lax.scan(_maybe_remat(body), (h, aux, zl), (params["blocks"], kv_in))
+        new_cache = None if cache is None else {"kv": kv_out, "len": start + S}
+
+    elif cfg.family == "hybrid":
+        period = cfg.attn_period
+        attn_pos = period // 2
+        kv_in = cache["kv"] if cache is not None else None
+        mamba_in = cache["mamba"] if cache is not None else None
+        decode = cache is not None and S == 1
+
+        def body(carry, xs):
+            h, aux, zl = carry
+            per, kv, mst = xs
+            m_i = 0
+            ffn_i = {"moe": 0, "mlp": 0}
+            kv_out, mst_out = kv, mst
+            for j in range(period):
+                if j == attn_pos:
+                    h, kv_out = _attn_block(cfg, per["attn"], h, positions, kv, start)
+                else:
+                    mp = jax.tree.map(lambda x, i=m_i: x[i], per["mamba"])
+                    xn = L.rmsnorm(h, mp["ln1"]["scale"], cfg.norm_eps)
+                    st = jax.tree.map(lambda x, i=m_i: x[i], mst)
+                    if decode:
+                        y, st2 = M.mamba_decode(mp["mix"], xn, st)
+                    else:  # cached prefill: parallel scan seeded by state
+                        y, st2 = M.mamba_prefill(mp["mix"], xn, st)
+                    mst_out = jax.tree.map(
+                        lambda full, new, i=m_i: full.at[i].set(new), mst_out, st2
+                    )
+                    h = h + y
+                    m_i += 1
+                is_moe = j % cfg.moe_every == cfg.moe_every - 1
+                key = "moe" if is_moe else "mlp"
+                fp = jax.tree.map(lambda x, i=ffn_i[key]: x[i], per[key])
+                h, a, z = _ffn_block(cfg, fp, h)
+                ffn_i[key] += 1
+                aux, zl = aux + a, zl + z
+            return (h, aux, zl), (kv_out, mst_out)
+
+        n_p = cfg.n_layers // period
+        if cache is None:
+            # training: mamba_forward handles state-free path; attention w/o cache
+            def body_nocache(carry, per):
+                h, aux, zl = carry
+                m_i = 0
+                ffn_i = {"moe": 0, "mlp": 0}
+                for j in range(period):
+                    if j == attn_pos:
+                        h, _ = _attn_block(cfg, per["attn"], h, positions, None, start)
+                    else:
+                        mp = jax.tree.map(lambda x, i=m_i: x[i], per["mamba"])
+                        xn = L.rmsnorm(h, mp["ln1"]["scale"], cfg.norm_eps)
+                        h = h + M.mamba_forward(mp["mix"], xn)
+                        m_i += 1
+                    is_moe = j % cfg.moe_every == cfg.moe_every - 1
+                    key = "moe" if is_moe else "mlp"
+                    fp = jax.tree.map(lambda x, i=ffn_i[key]: x[i], per[key])
+                    h, a, z = _ffn_block(cfg, fp, h)
+                    ffn_i[key] += 1
+                    aux, zl = aux + a, zl + z
+                return (h, aux, zl), None
+
+            (h, aux, zl), _ = lax.scan(_maybe_remat(body_nocache), (h, aux, zl), params["periods"])
+            new_cache = None
+        else:
+            (h, aux, zl), (kv_out, mst_out) = lax.scan(
+                body, (h, aux, zl), (params["periods"], kv_in, mamba_in)
+            )
+            new_cache = {"kv": kv_out, "mamba": mst_out, "len": start + S}
+
+    elif cfg.family == "ssm":
+        period = cfg.slstm_period
+        n_p = cfg.n_layers // period
+        decode = cache is not None and S == 1
+
+        stateful = cache is not None
+
+        def body(carry, xs):
+            h, aux, zl = carry
+            per, mst, sst = xs
+            mst_out = mst
+            for j in range(period - 1):
+                mp = jax.tree.map(lambda x, i=j: x[i], per["mlstm"])
+                xn = L.rmsnorm(h, mp["ln1"]["scale"], cfg.norm_eps)
+                st = jax.tree.map(lambda x, i=j: x[i], mst)
+                if decode:
+                    y, st2 = XL.mlstm_decode(mp["mix"], xn, st)
+                elif stateful:
+                    y, st2 = XL.mlstm_prefill(mp["mix"], xn, st)
+                else:
+                    y, st2 = XL.mlstm_prefill(mp["mix"], xn, None)[0], st
+                mst_out = jax.tree.map(lambda full, new, i=j: full.at[i].set(new), mst_out, st2)
+                h = h + y
+            sp = per["slstm"]
+            xn = L.rmsnorm(h, sp["ln1"]["scale"], cfg.norm_eps)
+            if decode:
+                y, sst = XL.slstm_decode(sp["mix"], xn, sst, cfg.n_heads)
+            elif stateful:
+                y, sst = XL.slstm_prefill(sp["mix"], xn, sst, cfg.n_heads)
+            else:
+                y = XL.slstm_prefill(sp["mix"], xn, None, cfg.n_heads)[0]
+            h = h + y
+            return (h, aux, zl), (mst_out, sst)
+
+        if cache is None:
+            ms = XL.init_mlstm_state(B, cfg.d_model, cfg.n_heads)
+            ss = XL.init_slstm_state(B, cfg.d_model)
+            mst_in = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_p, period - 1) + x.shape), ms)
+            sst_in = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_p,) + x.shape), ss)
+        else:
+            mst_in, sst_in = cache["mlstm"], cache["slstm"]
+        (h, aux, zl), (mst_out, sst_out) = lax.scan(
+            body, (h, aux, zl), (params["periods"], mst_in, sst_in)
+        )
+        new_cache = (
+            None if cache is None
+            else {"mlstm": mst_out, "slstm": sst_out, "len": start + S}
+        )
+
+    elif cfg.family == "audio":
+        # decoder over tokens with cross-attention to cached encoder output
+        if cache is None:
+            raise ValueError("whisper forward requires a cache carrying enc_out; use encode() + forward")
+        enc_out = cache["enc_out"]
+        # sinusoidal decoder positions, computed functionally so any context
+        # length lowers (adaptation of whisper's learned table; DESIGN.md §5)
+        h = h + L.sinusoidal_pos(positions[0], cfg.d_model).astype(h.dtype)[None]
+
+        def body(carry, xs):
+            h, aux, zl = carry
+            blk, kv = xs
+            # cross KV computed from encoder output per layer
+            xk = jnp.einsum("bsd,dhk->bshk", enc_out, blk["xattn"]["wk"])
+            xv = jnp.einsum("bsd,dhk->bshk", enc_out, blk["xattn"]["wv"])
+            h, kv_out = _attn_block(cfg, blk, h, positions, kv, start, cross_kv=(xk, xv))
+            h, a, z = _ffn_block(cfg, blk, h)
+            return (h, aux + a, zl + z), kv_out
+
+        (h, aux, zl), kv_out = lax.scan(_maybe_remat(body), (h, aux, zl), (params["blocks"], cache["kv"]))
+        new_cache = {"kv": kv_out, "enc_out": enc_out, "len": start + S}
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], h)
+    return ForwardOut(logits, new_cache, aux, zl)
+
+
+def encode(params: dict, cfg: ArchConfig, frames: Array) -> Array:
+    """Whisper encoder over precomputed frame embeddings (conv frontend stub)."""
+    h = frames.astype(jnp.bfloat16) + params["enc_pos"][None, : frames.shape[1]]
+    positions = jnp.arange(frames.shape[1])[None] + jnp.zeros((frames.shape[0], 1), jnp.int32)
+
+    def body(h, blk):
+        y, _ = L.attention(
+            blk["attn"], L.rmsnorm(h, blk["ln1"]["scale"], cfg.norm_eps),
+            positions, "none", causal=False,
+        )
+        h = h + y
+        h, _, _ = _ffn_block(cfg, blk, h)
+        return h, None
+
+    h, _ = lax.scan(_maybe_remat(body), h, params["enc_blocks"])
+    return L.rmsnorm(h, params["enc_norm"]["scale"], cfg.norm_eps)

@@ -1,0 +1,291 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan with stabilizer).
+
+mLSTM recurrence per head (state C [dh,dh], normalizer n [dh], stabilizer m):
+    f_t' = exp(log sigmoid(f_t)),  i_t' = exp(i_t)       (log-space stabilized)
+    C_t = f_t C_{t-1} + i_t v_t k_t^T
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_t . q_t|, 1)
+
+Training uses the **chunkwise** form: O(S/c) recurrent steps over chunk
+states + O(c^2) intra-chunk attention — sub-quadratic, TPU-friendly (the
+fused version is `kernels/ssm_scan`).  Decode is the O(1) recurrent update.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard
+
+Array = jax.Array
+
+CHUNK = 64
+
+
+# ---------------------------------------------------------------- mLSTM
+def init_mlstm(rng, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> dict:
+    di = 2 * d_model
+    dh = di // n_heads
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / math.sqrt(d_model)
+    sh = 1.0 / math.sqrt(dh)
+    return {
+        "up_proj": (jax.random.normal(ks[0], (d_model, 2 * di)) * s).astype(dtype),
+        "wq_blk": (jax.random.normal(ks[1], (n_heads, dh, dh)) * sh).astype(dtype),
+        "wk_blk": (jax.random.normal(ks[2], (n_heads, dh, dh)) * sh).astype(dtype),
+        "wv_blk": (jax.random.normal(ks[3], (n_heads, dh, dh)) * sh).astype(dtype),
+        "w_i": (jax.random.normal(ks[4], (di, n_heads)) * s * 0.1).astype(dtype),
+        "w_f": (jax.random.normal(ks[5], (di, n_heads)) * s * 0.1).astype(dtype),
+        "b_i": jnp.zeros((n_heads,), dtype),
+        "b_f": jnp.full((n_heads,), 3.0, dtype),  # init forget gates open
+        "down_proj": (jax.random.normal(ks[0], (di, d_model)) * sh).astype(dtype),
+        "ln": jnp.ones((di,), dtype),
+    }
+
+
+def _mlstm_qkvif(params: dict, xin: Array):
+    B, S, _ = xin.shape
+    nh, dh, _ = params["wq_blk"].shape
+    up = jnp.einsum("bsd,de->bse", xin, params["up_proj"])
+    up = shard(up, "act_btf")
+    di = up.shape[-1] // 2
+    x, z = up[..., :di], up[..., di:]
+    xh = x.reshape(B, S, nh, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["wq_blk"])
+    k = jnp.einsum("bshd,hde->bshe", xh, params["wk_blk"]) / math.sqrt(dh)
+    v = jnp.einsum("bshd,hde->bshe", xh, params["wv_blk"])
+    logi = (jnp.einsum("bse,eh->bsh", x, params["w_i"]) + params["b_i"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        (jnp.einsum("bse,eh->bsh", x, params["w_f"]) + params["b_f"]).astype(jnp.float32)
+    )
+    return q, k, v, logi, logf, x, z
+
+
+def mlstm_prefill(params: dict, xin: Array, state: dict | None, chunk: int = CHUNK):
+    """Chunkwise-parallel mLSTM: [B,S,D] -> ([B,S,D], final state or None)."""
+    B, S, D = xin.shape
+    nh, dh, _ = params["wq_blk"].shape
+    q, k, v, logi, logf, x, z = _mlstm_qkvif(params, xin)
+
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // c
+
+    def resh(t):  # [B, nc, c, nh, ...] -> [nc, B, nh, c, ...]
+        t = t.reshape((B, nc, c) + t.shape[2:])
+        return jnp.moveaxis(jnp.moveaxis(t, 3, 2), 1, 0)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)                  # [nc,B,nh,c,dh]
+    ic, fc = resh(logi[..., None])[..., 0], resh(logf[..., None])[..., 0]  # [nc,B,nh,c]
+
+    csum_f = jnp.cumsum(fc, axis=-1)                        # within-chunk cum log-f
+    fsum = csum_f[..., -1]                                  # total chunk decay
+
+    def step(carry, blk):
+        C, n, m = carry                                      # [B,nh,dh,dh],[B,nh,dh],[B,nh]
+        qb, kb, vb, ib, cfb, fs = blk
+        # log decay from chunk start to position t (inclusive of f_t)
+        a = cfb                                              # [B,nh,c]
+        # source weight for k_t,v_t carried to chunk end: fs - a + i
+        b = fs[..., None] - a + ib
+        # intra-chunk attention logits: D_ts = a_t - a_s + i_s  (t>=s)
+        dmat = a[..., :, None] - a[..., None, :] + ib[..., None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        # stabilizers
+        m_intra = jnp.max(jnp.where(tri, dmat, -jnp.inf), axis=-1)      # [B,nh,c]
+        m_inter = m[..., None] + a                           # carried state scale
+        m_t = jnp.maximum(m_inter, m_intra)
+        # inter-chunk contribution
+        qs = qb.astype(jnp.float32) * jnp.exp(m_inter - m_t)[..., None]
+        h_inter = jnp.einsum("bhtd,bhde->bhte", qs, C)
+        n_inter = jnp.einsum("bhtd,bhd->bht", qs, n)
+        # intra-chunk contribution
+        w = jnp.exp(dmat - m_t[..., None])
+        w = jnp.where(tri, w, 0.0)
+        s = jnp.einsum("bhtd,bhsd->bhts", qb.astype(jnp.float32), kb.astype(jnp.float32))
+        h_intra = jnp.einsum("bhts,bhse->bhte", w * s, vb.astype(jnp.float32))
+        n_intra = jnp.einsum("bhts,bhts->bht", w, s)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))
+        h = (h_inter + h_intra) / denom[..., None]
+        # chunk state update (stabilized by new running max m2)
+        m2 = jnp.maximum(m + fs, jnp.max(b, axis=-1))
+        Cw = jnp.exp(b - m2[..., None])                      # [B,nh,c]
+        C = C * jnp.exp(m + fs - m2)[..., None, None] + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", Cw, kb.astype(jnp.float32), vb.astype(jnp.float32)
+        )
+        n = n * jnp.exp(m + fs - m2)[..., None] + jnp.einsum(
+            "bhs,bhsd->bhd", Cw, kb.astype(jnp.float32)
+        )
+        return (C, n, m2), h
+
+    if state is not None:
+        carry0 = (state["C"], state["n"], state["m"])
+    else:
+        carry0 = (
+            jnp.zeros((B, nh, dh, dh), jnp.float32),
+            jnp.zeros((B, nh, dh), jnp.float32),
+            jnp.zeros((B, nh), jnp.float32),
+        )
+    # checkpoint per chunk: backward recomputes intra-chunk matrices instead
+    # of stacking [nc, B, nh, dh, dh] chunk-state residuals (dominant HBM
+    # term + 300 GiB of peak temp at train_4k; see EXPERIMENTS.md §Perf)
+    (Cf, nf, mf), hs = lax.scan(
+        jax.checkpoint(step, prevent_cse=False), carry0,
+        (qc, kc, vc, ic, csum_f, fsum)
+    )
+
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, nh, nc * c, dh)[:, :, :S]      # [B,nh,S,dh]
+    h = jnp.moveaxis(h, 1, 2).reshape(B, S, nh * dh).astype(xin.dtype)
+    h = h * params["ln"] * jax.nn.silu(z)
+    out = shard(jnp.einsum("bse,ed->bsd", h, params["down_proj"]), "act_btd")
+    new_state = {"C": Cf, "n": nf, "m": mf} if state is not None else None
+    return out, new_state
+
+
+def mlstm_forward(params: dict, xin: Array, chunk: int = CHUNK) -> Array:
+    """Training: stateless chunkwise mLSTM."""
+    return mlstm_prefill(params, xin, None, chunk)[0]
+
+
+def init_mlstm_state(batch: int, d_model: int, n_heads: int) -> dict:
+    di = 2 * d_model
+    dh = di // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.zeros((batch, n_heads), jnp.float32),
+    }
+
+
+def mlstm_decode(params: dict, xin: Array, state: dict) -> tuple[Array, dict]:
+    """One-token recurrent step: xin [B,1,D]."""
+    B = xin.shape[0]
+    nh, dh, _ = params["wq_blk"].shape
+    q, k, v, logi, logf, x, z = _mlstm_qkvif(params, xin)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))          # [B,nh,dh]
+    logi, logf = logi[:, 0], logf[:, 0]                                  # [B,nh]
+
+    m2 = jnp.maximum(state["m"] + logf, logi)
+    fw = jnp.exp(state["m"] + logf - m2)[..., None]
+    iw = jnp.exp(logi - m2)[..., None]
+    C = state["C"] * fw[..., None] + iw[..., None] * k[..., :, None] * v[..., None, :]
+    n = state["n"] * fw + iw * k
+    hq = jnp.einsum("bhde,bhd->bhe", C, q)
+    nq = jnp.einsum("bhd,bhd->bh", n, q)
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m2))
+    h = (hq / denom[..., None]).reshape(B, 1, nh * dh).astype(xin.dtype)
+    h = h * params["ln"] * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, params["down_proj"])
+    return out, {"C": C, "n": n, "m": m2}
+
+
+# ---------------------------------------------------------------- sLSTM
+def init_slstm(rng, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> dict:
+    d = d_model
+    dh = d // n_heads
+    ks = jax.random.split(rng, 9)
+    s = 1.0 / math.sqrt(d)
+    p = {}
+    for i, g in enumerate(("i", "f", "o", "z")):
+        p[f"w_{g}"] = (jax.random.normal(ks[i], (d, d)) * s).astype(dtype)
+        p[f"r_{g}"] = (jax.random.normal(ks[4 + i], (n_heads, dh, dh)) * s).astype(dtype)
+        p[f"b_{g}"] = (jnp.full((d,), 3.0) if g == "f" else jnp.zeros((d,))).astype(dtype)
+    pf = 4.0 / 3.0
+    dff = int(d * pf)
+    p["w_in"] = (jax.random.normal(ks[8], (d, 2 * dff)) * s).astype(dtype)
+    p["w_out"] = (jax.random.normal(ks[0], (dff, d)) / math.sqrt(dff)).astype(dtype)
+    return p
+
+
+def _slstm_step(params, nh, carry, xt):
+    """xt [B,D] pre-projected gate inputs; carry (c,n,h,m) each [B,D]/[B,nh]."""
+    c, n, h, m = carry
+    B, D = xt[0].shape
+    dh = D // nh
+    hh = h.reshape(B, nh, dh)
+
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", hh, params[f"r_{g}"]).reshape(B, D)
+
+    zi, zf, zo, zz = xt
+    it = (zi + rec("i")).astype(jnp.float32)
+    ft = (zf + rec("f")).astype(jnp.float32)
+    ot = jax.nn.sigmoid((zo + rec("o")).astype(jnp.float32))
+    zt = jnp.tanh((zz + rec("z")).astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(ft)
+    m2 = jnp.maximum(logf + m, it)
+    iw = jnp.exp(it - m2)
+    fw = jnp.exp(logf + m - m2)
+    c2 = fw * c + iw * zt
+    n2 = fw * n + iw
+    h2 = (ot * (c2 / jnp.maximum(n2, 1e-6))).astype(h.dtype)
+    return (c2, n2, h2, m2), h2
+
+
+def slstm_prefill(params: dict, xin: Array, state: dict | None, n_heads: int):
+    """Sequential sLSTM over [B,S,D] + gated FFN; threads state if given."""
+    B, S, D = xin.shape
+    zi = jnp.einsum("bsd,de->bse", xin, params["w_i"]) + params["b_i"]
+    zf = jnp.einsum("bsd,de->bse", xin, params["w_f"]) + params["b_f"]
+    zo = jnp.einsum("bsd,de->bse", xin, params["w_o"]) + params["b_o"]
+    zz = jnp.einsum("bsd,de->bse", xin, params["w_z"]) + params["b_z"]
+
+    def step(carry, xs):
+        return _slstm_step(params, n_heads, carry, xs)
+
+    if state is not None:
+        carry0 = (state["c"], state["n"], state["h"], state["m"])
+    else:
+        c0 = jnp.zeros((B, D), jnp.float32)
+        h0 = jnp.zeros((B, D), xin.dtype)
+        m0 = jnp.full((B, D), -1e30, jnp.float32)
+        carry0 = (c0, c0, h0, m0)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (zi, zf, zo, zz))
+    (cf, nf, hf, mf), hs = lax.scan(step, carry0, xs)
+    h = jnp.moveaxis(hs, 0, 1)                               # [B,S,D]
+
+    # post-projection gated FFN (pf = 4/3)
+    u = jnp.einsum("bsd,de->bse", h, params["w_in"])
+    dff = u.shape[-1] // 2
+    u = jax.nn.silu(u[..., :dff]) * u[..., dff:]
+    out = shard(jnp.einsum("bse,ed->bsd", u, params["w_out"]), "act_btd")
+    new_state = {"c": cf, "n": nf, "h": hf, "m": mf} if state is not None else None
+    return out, new_state
+
+
+def slstm_forward(params: dict, xin: Array, n_heads: int) -> Array:
+    return slstm_prefill(params, xin, None, n_heads)[0]
+
+
+def init_slstm_state(batch: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.zeros((batch, d_model), jnp.float32),
+        "h": jnp.zeros((batch, d_model), dtype),
+        "m": jnp.full((batch, d_model), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(params: dict, xin: Array, state: dict, n_heads: int) -> tuple[Array, dict]:
+    x = xin[:, 0]
+    zs = tuple(
+        jnp.einsum("bd,de->be", x, params[f"w_{g}"]) + params[f"b_{g}"]
+        for g in ("i", "f", "o", "z")
+    )
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), h2 = _slstm_step(params, n_heads, carry, zs)
+    u = jnp.einsum("bd,de->be", h2, params["w_in"])
+    dff = u.shape[-1] // 2
+    u = jax.nn.silu(u[..., :dff]) * u[..., dff:]
+    out = jnp.einsum("be,ed->bd", u, params["w_out"])[:, None]
+    return out, {"c": c, "n": n, "h": h, "m": m}

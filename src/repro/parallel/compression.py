@@ -1,0 +1,72 @@
+"""Error-feedback gradient compression for the cross-pod (DCN) axis.
+
+The paper's point (1) "energy by reducing data movement" extended to the pod
+hierarchy: the in-pod reduce runs at full precision over ICI, while the
+narrow cross-pod hop carries int8 (or sparsified top-k) blocks with an
+error-feedback residual so compression noise is unbiased over steps
+(Karimireddy et al. style).  Composes with `core.collectives.
+hierarchical_all_reduce`: compress exactly the tensor that crosses pods.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any   # error-feedback carry, same tree as grads (fp32)
+
+
+def init_compression_state(grads_like: Any) -> CompressionState:
+    return CompressionState(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    )
+
+
+def _quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 with fp32 scale."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(
+    grads: Any, state: CompressionState
+) -> tuple[Any, CompressionState, dict]:
+    """One error-feedback int8 round-trip (what the DCN hop transmits).
+
+    Returns (decompressed grads as seen by receivers, new residual state,
+    metrics).  Callers place this around the cross-pod psum; the int8 payload
+    is 4x smaller than fp32 on the slowest link.
+    """
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, scale = _quantize_int8(x)
+        deq = _dequantize_int8(q, scale)
+        return deq.astype(g.dtype), x - deq
+
+    out = jax.tree.map(one, grads, state.residual)
+    comp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    n_bytes_fp32 = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    n_bytes_int8 = sum(g.size * 1 + 4 for g in jax.tree.leaves(grads))
+    return comp, CompressionState(resid), {
+        "dcn_bytes_uncompressed": n_bytes_fp32,
+        "dcn_bytes_compressed": n_bytes_int8,
+    }
+
+
+def topk_sparsify(g: jnp.ndarray, frac: float = 0.01) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Magnitude top-k sparsification (values, flat indices) — optional mode."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx

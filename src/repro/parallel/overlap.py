@@ -1,0 +1,98 @@
+"""Comm/compute overlap scheduling + model-guided collective selection.
+
+Two levels, mirroring the paper's split between *protocols* (§2) and
+*models* (§3):
+
+1. **Strategy selection** — `CollectiveStrategist` consults the §3 perf
+   models to choose, per tensor and per axis, between native XLA collectives,
+   the RMA ring schedules (`core.collectives`), the hierarchical in-pod/
+   cross-pod split, and the fused Pallas overlap kernel.  This is the
+   paper's "model-guided autotuning" made executable.
+
+2. **Gradient-sync overlap** — `overlapped_grad_sync` interleaves per-bucket
+   reduce-scatter with the backward walk order, so the last layer's gradient
+   reduction overlaps earlier layers' backward compute (XLA latency-hiding
+   does the low-level interleave; the bucketing + epoch boundaries here keep
+   it legal and give the compiler the freedom).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives
+from repro.core.perfmodel import DEFAULT_MODEL, PerfModel
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveStrategist:
+    model: PerfModel = DEFAULT_MODEL
+
+    def allreduce_plan(self, nbytes: float, pods: int, per_pod: int
+                       ) -> Literal["flat_ring", "hierarchical"]:
+        return self.model.select_allreduce(nbytes, pods, per_pod)
+
+    def allgather_matmul_plan(self, m: int, k: int, n: int, shards: int,
+                              dtype_bytes: int = 2
+                              ) -> Literal["unfused", "fused_ring"]:
+        """Fuse iff the per-step matmul hides the per-step put (overlap §3.1.1)."""
+        shard_bytes = k * n * dtype_bytes / shards
+        t_put = self.model.p_put(shard_bytes)
+        t_mm = 2.0 * m * (k / shards) * n / self.model.hw.peak_flops_bf16
+        return "fused_ring" if t_mm >= 0.5 * t_put else "unfused"
+
+    def sync_plan(self, k_neighbors: int, p: int) -> Literal["pscw", "fence"]:
+        return self.model.select_sync_mode(k_neighbors, p)
+
+
+# ----------------------------------------------------- gradient-sync overlap
+def bucket_grads(grads: Any, bucket_bytes: int = 32 * 2**20) -> list[list]:
+    """Greedy size-bucketing of gradient leaves (reduction granularity)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    buckets, cur, cur_bytes = [], [], 0
+    for i, g in enumerate(leaves):
+        nb = g.size * g.dtype.itemsize
+        if cur and cur_bytes + nb > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nb
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def overlapped_grad_sync(
+    grads: Any,
+    inner_axis: str = "data",
+    outer_axis: str | None = "pod",
+    bucket_bytes: int = 32 * 2**20,
+    compress_outer: bool = False,
+) -> Any:
+    """Reduce gradients with per-bucket epochs inside shard_map.
+
+    Buckets are independent fence epochs, so XLA may interleave bucket k's
+    ring steps with bucket k+1's local sums — the RMA analogue of NCCL
+    bucketed all-reduce with backward overlap.  When `compress_outer`, the
+    cross-pod hop applies error-feedback int8 (see parallel.compression).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    buckets = bucket_grads(grads, bucket_bytes)
+    out = list(leaves)
+    for bucket in buckets:
+        for i in bucket:
+            g = leaves[i]
+            if outer_axis is not None:
+                out[i] = collectives.hierarchical_all_reduce(g, inner_axis, outer_axis)
+            else:
+                out[i] = collectives.all_reduce(g, inner_axis)
+        # bucket boundary: commit epoch before the next bucket is scheduled
+        pinned = lax.optimization_barrier(tuple(out[i] for i in bucket))
+        for j, i in enumerate(bucket):
+            out[i] = pinned[j]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,82 @@
+"""Pipeline parallelism (GPipe-style) over the `pod` axis, built on RMA puts.
+
+For multi-pod runs an alternative to pure data-parallel pods: stages are
+mapped to pods, activations flow stage-to-stage as one-sided puts
+(`collective_permute` on the pod axis — a DCN hop), microbatches fill the
+pipeline.  The schedule is the classic (num_micro + num_stages - 1)-step
+loop with bubble fraction (S-1)/(M+S-1); the perf model exposes that
+formula so the launcher can pick DP-pods vs PP-pods per workload.
+
+Used by `examples/pipeline_pods.py`; the dry-run default keeps pods on DP
+(better for the assigned shapes — see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import rma
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_stages: int
+    n_micro: int
+    axis: str = "pod"
+
+    @property
+    def bubble_fraction(self) -> float:
+        return (self.n_stages - 1) / (self.n_micro + self.n_stages - 1)
+
+
+def pipeline_forward(
+    stage_fn: Callable,      # (stage_params, x) -> y   (this rank's stage)
+    stage_params,
+    x_micro: jax.Array,      # [n_micro, mb, ...] microbatched inputs (stage 0's)
+    cfg: PipelineConfig,
+) -> jax.Array:
+    """Run the GPipe forward schedule inside shard_map over `cfg.axis`.
+
+    Rank s applies stage s.  At tick t, rank s computes microbatch t-s (if
+    in range) and puts its activation to rank s+1.  Output: stage S-1's
+    activations for all microbatches, in order.
+    """
+    stage = lax.axis_index(cfg.axis)
+    n_t = cfg.n_micro + cfg.n_stages - 1
+    mb_shape = x_micro.shape[1:]
+
+    def tick(t, carry):
+        inflight, outputs = carry
+        mb_idx = t - stage
+        # stage 0 reads fresh input; others use what arrived last tick
+        my_in = lax.cond(
+            stage == 0,
+            lambda: lax.dynamic_index_in_dim(
+                x_micro, jnp.clip(t, 0, cfg.n_micro - 1), 0, keepdims=False),
+            lambda: inflight,
+        )
+        active = (mb_idx >= 0) & (mb_idx < cfg.n_micro)
+        y = lax.cond(active, lambda v: stage_fn(stage_params, v),
+                     lambda v: jnp.zeros_like(v), my_in)
+        # one-sided put to the next stage (ring put on the pod axis)
+        inflight = rma.put_shift(y, +1, cfg.axis)
+        # last stage records finished microbatches
+        outputs = lax.cond(
+            active & (stage == cfg.n_stages - 1),
+            lambda o: lax.dynamic_update_index_in_dim(
+                o, y, jnp.clip(mb_idx, 0, cfg.n_micro - 1), 0),
+            lambda o: o,
+            outputs,
+        )
+        return inflight, outputs
+
+    inflight0 = jnp.zeros(mb_shape, x_micro.dtype)
+    outputs0 = jnp.zeros((cfg.n_micro,) + mb_shape, x_micro.dtype)
+    _, outputs = lax.fori_loop(0, n_t, tick, (inflight0, outputs0))
+    # results live on the last stage: one-sided broadcast to all stages
+    return rma.put_bcast(outputs, cfg.n_stages - 1, cfg.axis)

@@ -1,0 +1,163 @@
+"""Batched serving engine: continuous batching over a shared KV cache.
+
+Host-side admission control uses the *paper's lock protocol* (see
+`core.locks_sim`): request threads take shared locks on the cache window to
+append, the scheduler takes the exclusive lock to compact/evict — a live
+deployment of MPI_Win_lock semantics where gang-scheduled device code cannot
+express them (DESIGN.md §5.1).
+
+Device-side the engine runs two jitted programs: `prefill` (one sequence at
+a time into its cache lane) and `decode_step` (all active lanes, one token).
+Slots are fixed (static shapes); finished lanes are recycled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.locks_sim import LockOrigin, LockWindow
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    output: list[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, n_slots: int = 4, max_seq: int = 256):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(n_slots, max_seq)
+        self.slot_free = [True] * n_slots
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.slot_last = np.zeros(n_slots, np.int32)
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        # admission control: paper's RW lock over the cache window
+        self.lock_win = LockWindow(p=1)
+        self.lock = LockOrigin(self.lock_win, rank=0)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(self._prefill_impl, static_argnames=("plen",))
+
+    # --------------------------------------------------------- plumbing
+    def _prefill_impl(self, params, cache, tokens, slot, plen):
+        """Prefill one slot's lane: write K/V rows for [0, plen)."""
+        # run the model on this single sequence with a fresh single-lane cache
+        lane_cache = self.model.init_cache(1, self.max_seq)
+        logits, lane_cache = self.model.prefill(params, tokens[None, :plen], lane_cache, None)
+
+        def put(full, lane):
+            # lane leaves have batch dim 1 where full has n_slots
+            b_axis = _batch_axis(full.shape, lane.shape)
+            if b_axis is None:
+                return full
+            idx = [slice(None)] * full.ndim
+            return jax.lax.dynamic_update_index_in_dim(full, lane[_take0(b_axis, lane.ndim)], slot, b_axis)
+
+        new_cache = jax.tree.map(put, cache, lane_cache)
+        new_cache["len"] = cache["len"]  # global len unused in slot mode
+        return logits[0], new_cache
+
+    def submit(self, req: Request) -> None:
+        self.queue.put(req)
+
+    # ------------------------------------------------------------ steps
+    def admit(self) -> int:
+        """Admit queued requests into free slots (shared-lock section)."""
+        admitted = 0
+        while not self.queue.empty() and any(self.slot_free):
+            req = self.queue.get()
+            slot = self.slot_free.index(True)
+            self.lock.lock_shared(0)
+            try:
+                plen = len(req.prompt)
+                tokens = jnp.zeros((self.max_seq,), jnp.int32).at[:plen].set(
+                    jnp.asarray(req.prompt, jnp.int32)
+                )
+                logits, self.cache = self._prefill(
+                    self.params, self.cache, tokens, slot, plen=plen
+                )
+                self.slot_free[slot] = False
+                self.slot_req[slot] = req
+                self.slot_pos[slot] = plen
+                first = int(jnp.argmax(logits))
+                self.slot_last[slot] = first
+                req.output.append(first)   # the prefill already produced token 1
+                if len(req.output) >= req.max_new:
+                    self.slot_free[slot] = True
+                    self.slot_req[slot] = None
+                    req.done.set()
+                admitted += 1
+            finally:
+                self.lock.unlock_shared(0)
+        return admitted
+
+    def step(self) -> int:
+        """One decode step over all active lanes; returns #tokens emitted."""
+        active = [i for i in range(self.n_slots) if not self.slot_free[i]]
+        if not active:
+            return 0
+        tokens = jnp.asarray(self.slot_last, jnp.int32)
+        # the cache len is per-engine-step: use max position (static shapes);
+        # per-slot masking comes from kv_valid_len inside attention
+        cache = dict(self.cache)
+        cache["len"] = jnp.asarray(int(self.slot_pos.max()), jnp.int32)
+        logits, new_cache = self._decode(self.params, tokens, cache)
+        self.cache = new_cache
+        emitted = 0
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i in active:
+            req = self.slot_req[i]
+            req.output.append(int(nxt[i]))
+            self.slot_last[i] = int(nxt[i])
+            self.slot_pos[i] += 1
+            emitted += 1
+            if len(req.output) >= req.max_new or self.slot_pos[i] >= self.max_seq - 1:
+                # exclusive-lock section: recycle the lane
+                self.lock.lock_exclusive(0)
+                try:
+                    self.slot_free[i] = True
+                    self.slot_req[i] = None
+                    req.done.set()
+                finally:
+                    self.lock.unlock_exclusive(0)
+        return emitted
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (not self.queue.empty() or any(not f for f in self.slot_free)) and steps < max_steps:
+            self.admit()
+            self.step()
+            steps += 1
+
+
+def _batch_axis(full_shape, lane_shape) -> Optional[int]:
+    """Find the axis where lane has size 1 and full has n_slots."""
+    if len(full_shape) != len(lane_shape):
+        return None
+    for i, (f, l) in enumerate(zip(full_shape, lane_shape)):
+        if l == 1 and f != 1:
+            return i
+        if f != l:
+            return None
+    return None
+
+
+def _take0(axis: int, ndim: int):
+    idx = [slice(None)] * ndim
+    idx[axis] = 0
+    return tuple(idx)

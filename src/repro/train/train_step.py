@@ -1,0 +1,96 @@
+"""jit-able train / serve steps with microbatch accumulation and remat.
+
+These are the functions the multi-pod dry-run lowers: GSPMD consumes the
+sharding constraints placed by the active `ShardingPolicy` (models) and the
+param/optimizer shardings attached to the input ShapeDtypeStructs (launcher).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.registry import Model
+from repro.parallel.sharding import ShardingPolicy, use_policy
+
+from .optimizer import AdamWConfig, OptState, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    n_microbatches: int = 1
+    remat: bool = True
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    step_cfg: StepConfig = StepConfig(),
+    policy: Optional[ShardingPolicy] = None,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        T.set_remat(step_cfg.remat)
+        with use_policy(policy):
+            loss, met = model.loss(params, batch)
+        T.set_remat(False)
+        return loss, met
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch: dict):
+        n = step_cfg.n_microbatches
+        if n == 1:
+            (loss, met), grads = grad_fn(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches (B must divide n)
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((n, b // n) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            met = {"nll": loss, "aux": jnp.zeros(()), "z": jnp.zeros(())}
+
+        with use_policy(policy):
+            params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **met, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, policy: Optional[ShardingPolicy] = None) -> Callable:
+    def prefill_step(params, batch: dict):
+        with use_policy(policy):
+            out = model.forward_logits(params, batch)
+        return out.logits
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, policy: Optional[ShardingPolicy] = None) -> Callable:
+    """One decode step: a new token against a full KV/SSM cache."""
+
+    def serve_step(params, token, cache):
+        with use_policy(policy):
+            logits, cache = model.decode_step(params, token, cache)
+        return logits, cache
+
+    return serve_step

@@ -1,0 +1,31 @@
+"""Subprocess runner for tests that need multiple (forced-host) devices.
+
+The main pytest process must keep seeing ONE CPU device (smoke tests), so
+anything needing a mesh runs as a child process with
+XLA_FLAGS=--xla_force_host_platform_device_count=N set before jax imports.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+SUBTESTS = os.path.join(os.path.dirname(__file__), "subtests")
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+def run_subtest(name: str, devices: int = 8, timeout: int = 900, args: list[str] | None = None) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SUBTESTS, name)] + (args or []),
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subtest {name} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout

@@ -1,0 +1,34 @@
+"""Multi-device: checkpoint saved on one mesh restores on a smaller mesh."""
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.ft.elastic import elastic_restore, plan_mesh
+
+assert plan_mesh(8, 4).devices == 8 and plan_mesh(6, 4).model in (1, 2)
+
+mesh_a = jax.make_mesh((2, 4), ("data", "model"))
+tree = {
+    "w_in": jax.device_put(jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32),
+                           NamedSharding(mesh_a, P("data", "model"))),
+    "norm": jnp.ones((7,), jnp.bfloat16),
+}
+with tempfile.TemporaryDirectory() as d:
+    ckpt = CheckpointManager(d)
+    ckpt.save(5, tree, extra={"step": 5}, blocking=True)
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    # restore on 4 devices (half the cluster died), keep model=2
+    restored, extra, mesh_b, pol = elastic_restore(
+        ckpt, like, n_surviving_devices=4, prefer_model=2)
+    assert extra["step"] == 5
+    assert dict(mesh_b.shape) == {"data": 2, "model": 2}, mesh_b.shape
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(restored[k]), np.asarray(tree[k]))
+    shard_devs = {d_.id for d_ in restored["w_in"].sharding.device_set}
+    assert len(shard_devs) == 4
+print("PASS elastic restore 8->4 devices")

@@ -1,0 +1,27 @@
+"""Multi-device integration tests (subprocess with forced host devices)."""
+
+from .helpers import run_subtest
+
+
+def test_rma_collectives_vs_native():
+    run_subtest("rma_collectives_sub.py", devices=8)
+
+
+def test_distributed_hashtable():
+    run_subtest("hashtable_sub.py", devices=8)
+
+
+def test_elastic_checkpoint_reshard():
+    run_subtest("elastic_sub.py", devices=8)
+
+
+def test_pipeline_parallel_forward():
+    run_subtest("pipeline_sub.py", devices=4)
+
+
+def test_overlapped_grad_sync_and_compression():
+    run_subtest("gradsync_sub.py", devices=8)
+
+
+def test_rma_api_surface():
+    run_subtest("rma_api_sub.py", devices=8)
