@@ -1,0 +1,19 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench example-disagg
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# skip the subprocess-heavy multi-device integration tests
+test-fast:
+	$(PYTHON) -m pytest -x -q --ignore=tests/test_distributed.py
+
+bench:
+	$(PYTHON) benchmarks/run.py
+
+example-disagg:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+		$(PYTHON) examples/disagg_serve.py

@@ -4,7 +4,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import emit, time_fn
@@ -25,6 +25,7 @@ def main() -> None:
         "dsde_accumulate": dsde.exchange_accumulate,          # the paper's winner
         "dsde_alltoall": dsde.exchange_alltoall_baseline,
         "dsde_reduce_scatter": dsde.exchange_reduce_scatter_baseline,
+        "dsde_queue": dsde.exchange_queue,                    # rmaq MPSC rings
     }
     results = {}
     for name, proto in protos.items():

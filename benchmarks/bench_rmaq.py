@@ -1,0 +1,83 @@
+"""rmaq queue benchmarks (DESIGN.md §6.8): message throughput + notified-put
+latency vs the dense alltoall dispatch, with the §6.5 model's predictions.
+
+Columns: name,us_per_call,derived — derived carries msgs/s and the model's
+predicted dispatch choice so the CSV documents the crossover.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, time_fn
+from repro.compat import shard_map
+from repro.core import dsde
+from repro.core.perfmodel import DEFAULT_MODEL
+from repro.rmaq import notify, queue as rq
+
+
+def main() -> None:
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("x",))
+    sm = functools.partial(shard_map, mesh=mesh, check_vma=False)
+    specs = rq.state_specs("x")
+
+    # ---- queue enqueue+dequeue round: k msgs/rank, small payloads --------
+    k, width, cap = 8, 16, 64
+    desc, state = rq.queue_allocate(mesh, "x", cap, (width,))
+    key = jax.random.PRNGKey(0)
+    msgs = jax.random.normal(key, (n, k, width))
+    dest = jax.random.randint(jax.random.fold_in(key, 1), (n, k), 0, n)
+
+    def q_round(state, m, d):
+        st = rq.to_local(state)
+        st, _ = rq.enqueue(desc, st, m[0], d[0])
+        st, items, valid = rq.dequeue(desc, st, k * n)
+        return rq.to_global(st), items[None], valid[None]
+
+    fq = jax.jit(sm(q_round, in_specs=(specs, P("x", None, None), P("x", None)),
+                    out_specs=(specs, P("x", None, None), P("x", None))))
+    us = time_fn(lambda s: fq(s, msgs, dest)[1], state)
+    rate = n * k / (us * 1e-6)
+    emit("rmaq_enqueue_dequeue", us, f"k={k};msgs_per_s={rate:.0f}")
+
+    # ---- notified put vs plain put (the notification premium) ------------
+    x = jax.random.normal(key, (n * 8, 128))
+    cnt = jnp.zeros((n,), jnp.uint32)
+
+    def nput(x, c):
+        out, c2 = notify.notified_put_shift(x, c, 1, "x")
+        return out, c2
+
+    fn = jax.jit(sm(nput, in_specs=(P("x", None), P("x")),
+                    out_specs=(P("x", None), P("x"))))
+    us_n = time_fn(lambda a: fn(a, cnt)[0], x)
+    from repro.core import rma
+
+    fp = jax.jit(sm(lambda a: rma.put_shift(a, 1, "x"),
+                    in_specs=P("x", None), out_specs=P("x", None)))
+    us_p = time_fn(fp, x)
+    pred = DEFAULT_MODEL.p_notified_put(x.nbytes / n) * 1e6
+    emit("rmaq_notified_put", us_n, f"plain_put_us={us_p:.2f};model_us={pred:.2f}")
+
+    # ---- sparse DSDE: queue protocol vs dense alltoall protocol ----------
+    items, cap_pair = 2, 8          # sparse: 2 items/rank, capacity 8/pair
+    data = jax.random.normal(key, (n * items, 4))
+    targets = jax.random.randint(jax.random.fold_in(key, 2), (n * items,), 0, n)
+    results = {}
+    for name, proto in [("rmaq_dsde_queue", dsde.exchange_queue),
+                        ("rmaq_dsde_alltoall", dsde.exchange_alltoall_baseline)]:
+        def body(d, t, proto=proto):
+            r = proto(d, t, "x", cap_pair)
+            return r.recv_data, r.recv_valid
+        f = jax.jit(sm(body, in_specs=(P("x", None), P("x")),
+                       out_specs=(P("x", None), P("x"))))
+        results[name] = time_fn(f, data, targets)
+    choice = DEFAULT_MODEL.select_dispatch(items, 4 * 4.0, n, cap_pair)
+    for name, us in results.items():
+        emit(name, us, f"model_choice={choice}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ BENCHES = [
     ("benchmarks.bench_sync", 16, "Fig 6b-c + lock/flush constants"),
     ("benchmarks.bench_hashtable", 8, "Fig 7a hashtable"),
     ("benchmarks.bench_dsde", 8, "Fig 7b DSDE"),
+    ("benchmarks.bench_rmaq", 8, "rmaq queues (DESIGN.md §6.8)"),
     ("benchmarks.bench_fft", 8, "Fig 7c 3D FFT"),
     ("benchmarks.bench_milc", 8, "Fig 8 MILC stencil"),
     ("benchmarks.bench_roofline", 1, "roofline from dry-run"),

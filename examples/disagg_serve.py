@@ -1,0 +1,63 @@
+"""Disaggregated prefill/decode serving over rmaq channels.
+
+Prefill ranks build KV-cache blocks and ship them as notified puts into the
+decode ranks' MPSC rings; decode ranks drain their ring and emit tokens.
+Every emitted token is checked against the single-host reference — the
+channel is load-bearing, not decorative.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/disagg_serve.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.serve.disagg import DisaggConfig, DisaggEngine
+
+
+def main() -> None:
+    n = len(jax.devices())
+    if n < 2:
+        print("run with XLA_FLAGS=--xla_force_host_platform_device_count=4")
+        return
+    mesh = jax.make_mesh((n,), ("serve",))
+    cfg = DisaggConfig(
+        n_prefill=max(1, n // 2), block_tokens=16, d_model=32,
+        queue_capacity=16, max_recv_per_step=4,
+    )
+    engine = DisaggEngine(mesh, "serve", cfg, seed=0)
+    print(f"mesh: {cfg.n_prefill} prefill + {n - cfg.n_prefill} decode ranks; "
+          f"KV block = [{cfg.block_tokens}, 2, {cfg.d_model}] f32 per request")
+
+    rng = np.random.RandomState(7)
+    n_requests = 12
+    prompts = {i: rng.randint(0, cfg.vocab, size=cfg.block_tokens)
+               for i in range(n_requests)}
+    for rid, toks in prompts.items():
+        engine.submit(rid, toks)
+
+    t0 = time.perf_counter()
+    results = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+
+    ok = sum(results[rid] == engine.reference(toks)
+             for rid, toks in prompts.items())
+    stats = engine.queue_stats()
+    kv_bytes = cfg.block_tokens * 2 * cfg.d_model * 4
+    shipped = int(stats["enqueued"].sum())
+    print(f"served {len(results)} requests in {dt*1e3:.1f} ms "
+          f"({len(results)/dt:.0f} req/s)")
+    print(f"KV blocks shipped over the channel: {shipped} "
+          f"({shipped * kv_bytes / 1024:.0f} KiB), "
+          f"notifications: {int(stats['notifications'].sum())}, "
+          f"send retries (backpressure): {engine.retries}")
+    print(f"decode == single-host reference: {ok}/{n_requests}")
+    for rid in sorted(results)[:4]:
+        print(f"  req {rid}: token {results[rid]}")
+    if ok != n_requests:
+        raise SystemExit("MISMATCH between disaggregated and reference decode")
+
+
+if __name__ == "__main__":
+    main()

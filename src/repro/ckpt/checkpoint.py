@@ -16,7 +16,10 @@ Design for thousands of nodes:
   * self-describing: manifest.json carries step, tree structure, dtypes,
     shapes, and the data-pipeline cursor.
 
-Format: zstd-compressed msgpack of raw array bytes + JSON manifest.
+Format: compressed msgpack of raw array bytes + JSON manifest.  The codec
+is zstd when `zstandard` is installed and stdlib zlib otherwise (the
+manifest records which, so checkpoints restore across environments as long
+as the reader has the writer's codec).
 """
 
 from __future__ import annotations
@@ -24,13 +27,86 @@ from __future__ import annotations
 import json
 import os
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: offline images often lack the zstd bindings
+    import zstandard
+except ImportError:  # pragma: no cover - exercised where zstd is absent
+    zstandard = None
+
+
+class _ZlibCompressWriter:
+    """File-like zlib stream writer matching ZstdCompressor.stream_writer."""
+
+    def __init__(self, f, level: int = 6):
+        self._f = f
+        self._c = zlib.compressobj(level)
+
+    def write(self, data: bytes) -> int:
+        self._f.write(self._c.compress(data))
+        return len(data)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self._f.write(self._c.flush())
+        return False
+
+
+class _ZlibDecompressReader:
+    """Streaming zlib reader matching ZstdDecompressor.stream_reader."""
+
+    def __init__(self, f, chunk: int = 1 << 20):
+        self._f = f
+        self._d = zlib.decompressobj()
+        self._chunk = chunk
+        self._buf = b""
+
+    def read(self, n: int = -1) -> bytes:
+        while (n < 0 or len(self._buf) < n) and not self._d.eof:
+            raw = self._f.read(self._chunk)
+            if not raw:
+                self._buf += self._d.flush()
+                break
+            self._buf += self._d.decompress(raw)
+        if n < 0:
+            out, self._buf = self._buf, b""
+        else:
+            out, self._buf = self._buf[:n], self._buf[n:]
+        return out
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+def _codec_name() -> str:
+    return "zstd" if zstandard is not None else "zlib"
+
+
+def _compress_writer(f, codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError("checkpoint written with zstd but zstandard not installed")
+        return zstandard.ZstdCompressor(level=3).stream_writer(f)
+    return _ZlibCompressWriter(f)
+
+
+def _decompress_reader(f, codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError("checkpoint written with zstd but zstandard not installed")
+        return zstandard.ZstdDecompressor().stream_reader(f)
+    return _ZlibDecompressReader(f)
 
 
 def _flatten(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
@@ -84,11 +160,11 @@ class CheckpointManager:
         tmp = os.path.join(self.directory, f"tmp.{step}.{os.getpid()}")
         final = os.path.join(self.directory, f"step_{step:08d}")
         os.makedirs(tmp, exist_ok=True)
-        manifest = {"step": step, "extra": extra, "arrays": []}
-        cctx = zstandard.ZstdCompressor(level=3)
+        codec = _codec_name()
+        manifest = {"step": step, "extra": extra, "codec": codec, "arrays": []}
         with open(os.path.join(tmp, "data.msgpack.zst"), "wb") as f:
             packer = msgpack.Packer()
-            with cctx.stream_writer(f) as zf:
+            with _compress_writer(f, codec) as zf:
                 for key, arr in host_items:
                     manifest["arrays"].append(
                         {"key": key, "shape": list(arr.shape), "dtype": str(arr.dtype)}
@@ -144,9 +220,9 @@ class CheckpointManager:
             manifest = json.load(f)
 
         arrays: dict[str, np.ndarray] = {}
-        dctx = zstandard.ZstdDecompressor()
+        codec = manifest.get("codec", "zstd")
         with open(os.path.join(path, "data.msgpack.zst"), "rb") as f:
-            with dctx.stream_reader(f) as zf:
+            with _decompress_reader(f, codec) as zf:
                 unpacker = msgpack.Unpacker(zf, max_buffer_size=2**31)
                 for meta, raw in zip(manifest["arrays"], unpacker):
                     arrays[meta["key"]] = np.frombuffer(

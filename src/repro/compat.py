@@ -1,0 +1,91 @@
+"""JAX version-compatibility shims.
+
+The codebase is written against the current JAX surface (top-level
+``jax.shard_map`` with ``check_vma``, ``pltpu.CompilerParams``,
+``pltpu.InterpretParams``); CI images may carry an older release where the
+same features live under different names (``jax.experimental.shard_map``
+with ``check_rep``, ``pltpu.TPUCompilerParams``, boolean ``interpret``).
+Everything funnels through here so call sites stay on the modern spelling.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+try:  # modern: top-level export with check_vma kwarg
+    from jax import shard_map as _shard_map
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # 0.4.x: experimental module with check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+    """``jax.shard_map`` with the replication-check kwarg renamed per version."""
+    kw[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def pallas_compiler_params(**kwargs) -> Any:
+    """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (old)."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def pallas_interpret_params() -> Any:
+    """Interpret-mode marker for ``pallas_call(interpret=...)``.
+
+    New JAX wants an ``InterpretParams`` instance; old JAX wants ``True``.
+    """
+    cls = getattr(pltpu, "InterpretParams", None)
+    return cls() if cls is not None else True
+
+
+def axis_size(axis: str) -> int:
+    """``lax.axis_size`` (new) / constant-folded ``psum(1, axis)`` (old).
+
+    Both return the static size of a named mesh axis as a Python int when
+    called inside shard_map.
+    """
+    lax = jax.lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
+
+
+_MODERN_PALLAS = hasattr(pltpu, "InterpretParams")
+
+# Old (0.4.x) interpret mode raises "Remote signal not implemented" for
+# semaphore_signal with a device_id; kernels must skip cross-device
+# semaphore handshakes when interpreting there (safe: discharged remote
+# DMAs execute synchronously as collectives, so there is nothing to race).
+INTERPRET_REMOTE_SIGNAL = _MODERN_PALLAS
+
+
+def remote_device_id(device_id):
+    """`device_id` operand for remote DMAs/signals on a 1-D mesh.
+
+    Modern JAX wants the mesh-coordinate tuple; the 0.4.x interpret
+    discharge rule wants the bare scalar.
+    """
+    return (device_id,) if _MODERN_PALLAS else device_id
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict (new) or 1-list (old)."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
+__all__ = [
+    "shard_map",
+    "pallas_compiler_params",
+    "pallas_interpret_params",
+    "cost_analysis",
+]

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 from . import rma
 
 
@@ -35,7 +37,7 @@ def ring_all_gather(x: Array, axis: str, bidirectional: bool = True) -> Array:
     put can overlap with the consumer's compute on already-arrived shards
     (the fused version lives in `kernels/ring_matmul`).
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     me = lax.axis_index(axis)
     if p == 1:
         return x[None]
@@ -91,7 +93,7 @@ def ring_reduce_scatter(
     accumulates it into its running slot — the slotted MPI_Accumulate
     pattern (§2.4) in ring order.
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     me = lax.axis_index(axis)
     if p == 1:
         return x[0]
@@ -113,7 +115,7 @@ def ring_reduce_scatter(
 
 def all_reduce(x: Array, axis: str, op: Callable = jnp.add) -> Array:
     """RS + AG ring all-reduce over one axis, built purely on RMA puts."""
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     if p == 1:
         return x
     flat = x.reshape(-1)
@@ -132,7 +134,7 @@ def hierarchical_all_reduce(x: Array, inner_axis: str, outer_axis: str) -> Array
     (data, pod) hierarchy: the expensive outer (DCN) axis only ever carries
     1/inner_size of the payload.
     """
-    p = lax.axis_size(inner_axis)
+    p = compat.axis_size(inner_axis)
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % p
     flat = jnp.pad(flat, (0, pad))

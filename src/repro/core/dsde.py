@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 from . import rma, collectives
 
 
@@ -57,7 +59,7 @@ def exchange_accumulate(
     2's payload movement is a single all-to-all of the slot buffers — i.e.
     p one-sided puts issued in one epoch.
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     n = data.shape[0]
 
     # ---- step 1: per-target counts, accumulated into each target's counter
@@ -107,7 +109,7 @@ def exchange_alltoall_baseline(
     baseline required by the paper's Fig. 7b.
     """
     # identical packing, but counts move in their own full round first
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     res = exchange_accumulate(data, targets, axis, capacity_per_pair)
     # model the extra dense count round (payload identical under SPMD)
     _ = collectives.all_to_all(jnp.zeros((p,), jnp.int32), axis)
@@ -118,11 +120,47 @@ def exchange_reduce_scatter_baseline(
     data: Array, targets: Array, axis: str, capacity_per_pair: int
 ) -> DSDEResult:
     """Baseline 2: reduce_scatter for counts, then personalized sends."""
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     onehot = jax.nn.one_hot(targets, p, dtype=jnp.int32)
     counts = lax.psum_scatter(onehot.sum(0), axis, tiled=True)  # my recv total
     res = exchange_accumulate(data, targets, axis, capacity_per_pair)
     return res._replace(recv_counts=jnp.broadcast_to(counts, res.recv_counts.shape))
+
+
+def exchange_queue(
+    data: Array, targets: Array, axis: str, capacity_per_pair: int
+) -> DSDEResult:
+    """Queue-backed DSDE (repro.rmaq): items stream into each target's MPSC
+    ring via notified puts; the target drains its ring after the epoch.
+
+    Same contract as `exchange_accumulate`, different layout economics: the
+    ring is sized for the *total* expected receive volume (p*capacity,
+    rounded to a power of two), not per-pair slots, so a rank may receive
+    far more than `capacity_per_pair` from one hot producer as long as the
+    aggregate fits — exactly the elasticity DSDE workloads with skewed
+    targets want (the per-pair slotted layout strands free slots).  The
+    `CollectiveStrategist.dispatch_plan` rule chooses between them.
+    """
+    from repro.rmaq import queue as rq
+
+    p = compat.axis_size(axis)
+    n, d = data.shape
+    cap = max(2, p * capacity_per_pair)
+    cap = 1 << (cap - 1).bit_length()                 # next power of two
+
+    desc = rq.QueueDescriptor(axis, cap, (d,), data.dtype, None)
+    state = rq.QueueState(
+        buf=jnp.zeros((cap, d), data.dtype),
+        ctrs=jnp.zeros((rq.N_CTRS,), jnp.uint32),
+    )
+    state, receipt = rq.enqueue(desc, state, data, targets.astype(jnp.int32))
+    state, items, valid = rq.drain(desc, state)
+    return DSDEResult(
+        recv_data=items,
+        recv_valid=valid,
+        recv_counts=receipt.incoming,
+        sent_dropped=receipt.n_dropped,
+    )
 
 
 # -------------------------------------------------------------- MoE dispatch
@@ -146,7 +184,7 @@ def moe_dispatch(
     Experts are sharded over `axis` (EP); each rank owns n_experts/p of them.
     Returns per-local-expert batches plus combine metadata for `moe_combine`.
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     me = lax.axis_index(axis)
     n_tok, d = tokens.shape
     top_k = expert_idx.shape[1]
@@ -214,7 +252,7 @@ def moe_combine(
     The return trip is the same one-sided exchange reversed, followed by a
     gate-weighted scatter-add into the token buffer (slotted accumulate).
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     local_e, slots, d = expert_outputs.shape
     cap = slots // p
 

@@ -142,7 +142,60 @@ class PerfModel:
         eff_bw = self.hw.ici_link_bandwidth * 2
         return self.hw.ici_latency_per_hop * math.log2(max(n, 2)) + total_out / eff_bw / max(n // 4, 1) * (n / 4)
 
+    # -- rmaq: notified access + message queues (DESIGN.md §6.5) -----------
+    def p_notified_put(self, nbytes: float, hops: int = 1) -> float:
+        """Put-with-notification: payload put + the notification doorbell
+        (remote semaphore signal / counter accumulate) in the same epoch."""
+        return self.p_put(nbytes, hops) + self.hw.sem_op_latency
+
+    def notification_latency(self, hops: int = 1) -> float:
+        """Doorbell-only latency: the receiver learns 'a message arrived'."""
+        return self.hw.sem_op_latency + hops * self.hw.ici_latency_per_hop
+
+    def p_queue_reserve(self, hops: int = 1) -> float:
+        """Per-epoch reservation: one counter-window read (head/tail fetch).
+        Amortized over every message in the epoch — the fetch-and-add is
+        epoch-serialized, so k messages share one gather."""
+        return self.p_get(8.0, hops)
+
+    def p_queue_enqueue(self, nbytes: float, hops: int = 1) -> float:
+        """Marginal cost of one message through the MPSC ring: the 8-byte
+        fetch-and-add AMO (injection-rate bound) + the notified put of the
+        payload into the reserved slot."""
+        return self.p_message_rate(8.0) + self.p_notified_put(nbytes, hops)
+
+    def p_queue_dequeue(self, nbytes: float) -> float:
+        """Owner-local drain of one message: ring read + head publish
+        (HBM-bound copy + a flush-grade store; no remote ops at all)."""
+        return 2.0 * nbytes / self.hw.hbm_bandwidth + self.p_flush()
+
+    def queue_msg_rate(self, nbytes: float = 8.0) -> float:
+        """Messages/second one producer can push: injection-rate limited for
+        small payloads, link-bandwidth limited for large (paper Fig. 5b) —
+        p_message_rate already takes the max of those two regimes."""
+        return 1.0 / self.p_message_rate(nbytes)
+
     # -- model-guided strategy selection (paper §6 example) ----------------
+    def select_dispatch(
+        self,
+        n_msgs: int,
+        msg_bytes: float,
+        p: int,
+        capacity_per_pair: int,
+    ) -> Literal["queue", "alltoall"]:
+        """§6-style rule for sparse exchanges (DSDE, MoE dispatch, KV-block
+        shipping): per-message notified puts through the queue vs one dense
+        capacity-padded alltoall.
+
+        The queue pays one reservation round plus per-*actual*-message puts;
+        alltoall pays for the full p x capacity_per_pair slot matrix whether
+        occupied or not, plus its log(p) startup.  Sparse traffic
+        (n_msgs << p * capacity) therefore prefers the queue.
+        """
+        t_queue = self.p_queue_reserve() + n_msgs * self.p_queue_enqueue(msg_bytes)
+        t_alltoall = self.all_to_all(capacity_per_pair * msg_bytes, p)
+        return "queue" if t_queue < t_alltoall else "alltoall"
+
     def select_sync_mode(self, k: int, p: int) -> Literal["pscw", "fence"]:
         """Paper §6: use PSCW iff P_post+P_complete+P_start+P_wait < P_fence."""
         return "pscw" if self.p_pscw(k) < self.p_fence(p) else "fence"

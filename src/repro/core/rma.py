@@ -32,12 +32,14 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 
 Array = jax.Array
 
 
 def _axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
+    return compat.axis_size(axis)
 
 
 def rank(axis: str) -> Array:
@@ -76,11 +78,14 @@ def get_shift(x: Array, shift: int, axis: str) -> Array:
     return put_shift(x, -shift, axis)
 
 
-def get_index(x: Array, src: Array | int, axis: str) -> Array:
-    """Get rank `src`'s shard — all ranks read one rank (broadcast get)."""
-    n = _axis_size(axis)
+def _get_index_impl(x: Array, src: Array | int, axis: str) -> Array:
     full = lax.all_gather(x, axis)  # [n, ...]
     return jax.tree.map(lambda f: lax.dynamic_index_in_dim(f, src, 0, keepdims=False), full)
+
+
+def get_index(x: Array, src: Array | int, axis: str) -> Array:
+    """Get rank `src`'s shard — all ranks read one rank (broadcast get)."""
+    return _get_index_impl(x, src, axis)
 
 
 def get_gather(x: Array, src_per_rank: Array, axis: str) -> Array:
@@ -136,8 +141,13 @@ def fetch_and_op(x: Array, target: Array, axis: str, op: Callable = jnp.add) -> 
 
     TPU adaptation: no remote AMOs → implemented as a get followed by an
     owner-applied op within the same epoch (serialization is provided by the
-    epoch, not a hardware lock; see DESIGN.md §5.1).
+    epoch, not a hardware lock; see DESIGN.md §5.1).  `axis` names the window
+    axis whose epoch provides that serialization; it tags the per-axis AMO
+    counters so complexity tests can attribute atomics to a window.  For the
+    rank-ordered multi-origin variant (the queue's slot reservation) see
+    `repro.rmaq.notify.fetch_and_add_ordered`.
     """
+    OpCounter.record("accs", axis=axis)
     old = target
     new = op(target, x)
     return old, new
@@ -153,8 +163,13 @@ def put_all_to_all(x: Array, axis: str, tiled: bool = False) -> Array:
 
 
 def put_bcast(x: Array, root: int, axis: str) -> Array:
-    """Root puts its value to everyone (window-wide broadcast)."""
-    return get_index(x, root, axis)
+    """Root puts its value to everyone (window-wide broadcast).
+
+    Calls the unwrapped get implementation: a broadcast is ONE collective op,
+    not a collective plus a get (the double count the instrumented `get_index`
+    would record).
+    """
+    return _get_index_impl(x, root, axis)
 
 
 # ---------------------------------------------------------- instrumentation
@@ -169,6 +184,8 @@ class OpCounter:
         self.gets = 0
         self.accs = 0
         self.colls = 0
+        # per-window-axis breakdown: {axis: {kind: count}}
+        self.by_axis: dict = {}
 
     def __enter__(self) -> "OpCounter":
         OpCounter._active.append(self)
@@ -178,9 +195,12 @@ class OpCounter:
         OpCounter._active.remove(self)
 
     @classmethod
-    def record(cls, kind: str, n: int = 1) -> None:
+    def record(cls, kind: str, n: int = 1, axis: str | None = None) -> None:
         for c in cls._active:
             setattr(c, kind, getattr(c, kind) + n)
+            if axis is not None:
+                per = c.by_axis.setdefault(axis, {})
+                per[kind] = per.get(kind, 0) + n
 
 
 def _counted(kind: str):

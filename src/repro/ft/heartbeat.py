@@ -85,3 +85,59 @@ class HeartbeatMonitor:
     def healthy_nodes(self) -> list[int]:
         self.check_dead()
         return [i for i in range(self.n) if i not in self.dead]
+
+
+# --------------------------------------------------------- channel transport
+class ChannelHeartbeat:
+    """Heartbeats carried as rmaq channel messages (DESIGN.md §6.6).
+
+    Every node is a producer into the monitor rank's MPSC ring: `beat()`
+    stages a (node, step) message on the "beat" lane; `poll()` runs one
+    enqueue epoch, drains the monitor's ring, and feeds the monitor — the
+    one-sided philosophy of the module docstring made literal: a beat is a
+    notified put into the monitor's window, never an RPC, so a slow node
+    can never block detection.
+
+    Backpressure is a *feature* here: if the monitor's ring fills because
+    poll() stalls, beats are rejected at the origin and the nodes simply
+    look stale — precisely the failure signal a control plane should see
+    (queue stats expose the drops for debugging).
+    """
+
+    LANE = "beat"
+    MONITOR_RANK = 0
+
+    def __init__(self, monitor: HeartbeatMonitor, capacity: int = 64):
+        # local import: ft must stay importable without the device stack
+        from repro.rmaq.channel import HostChannel, Lane
+
+        self.monitor = monitor
+        self.channel = HostChannel(
+            p=monitor.n + 1,  # nodes 1..n produce; rank 0 is the monitor
+            capacity=capacity,
+            lanes=[Lane(self.LANE, (2,), "int32")],
+        )
+
+    def beat(self, node: int, step: int) -> None:
+        """Stage node's heartbeat (one-sided; delivered at next poll)."""
+        self.channel.send(
+            src=node + 1, name=self.LANE, payload=[node, step],
+            tag=step, dest=self.MONITOR_RANK,
+        )
+
+    def poll(self) -> int:
+        """One epoch: flush staged beats, drain the monitor ring, feed the
+        detector.  Returns the number of beats delivered."""
+        self.channel.flush()
+        msgs = self.channel.recv(self.MONITOR_RANK)
+        for m in msgs:
+            node, step = int(m["payload"][0]), int(m["payload"][1])
+            self.monitor.beat(node, step)
+        return len(msgs)
+
+    def stats(self) -> dict:
+        from repro.rmaq.queue import DROP
+
+        out = self.channel.stats(self.MONITOR_RANK)
+        out["dropped_total"] = int(self.channel.group.ctrs[:, DROP].sum())
+        return out

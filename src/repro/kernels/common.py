@@ -1,0 +1,30 @@
+"""Shared Pallas kernel helpers (one copy of the cross-device handshake)."""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+
+def neighbor_barrier(axis: str, n: int, interpret: bool = False) -> None:
+    """Barrier with both ring neighbors (paper: post/start matching).
+
+    Prevents a device from racing ahead and tearing down buffers while a
+    neighbor's DMA is inflight — the same reason FOMPI's start blocks on
+    matching posts.  Skipped under old-JAX interpret mode, where remote
+    semaphore signals are unimplemented and discharged DMAs are synchronous
+    collectives (nothing to race).
+    """
+    if interpret and not compat.INTERPRET_REMOTE_SIGNAL:
+        return
+    me = jax.lax.axis_index(axis)
+    left = jax.lax.rem(me - 1 + n, n)
+    right = jax.lax.rem(me + 1, n)
+    sem = pltpu.get_barrier_semaphore()
+    pltpu.semaphore_signal(sem, device_id=compat.remote_device_id(left),
+                           device_id_type=pltpu.DeviceIdType.MESH)
+    pltpu.semaphore_signal(sem, device_id=compat.remote_device_id(right),
+                           device_id_type=pltpu.DeviceIdType.MESH)
+    pltpu.semaphore_wait(sem, 2)

@@ -5,7 +5,7 @@ from __future__ import annotations
 import functools
 
 import jax
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .kernel import ring_matmul_pallas

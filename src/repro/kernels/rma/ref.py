@@ -6,9 +6,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 
 def put_shift_ref(x: jax.Array, shift: int, axis: str) -> jax.Array:
-    n = lax.axis_size(axis)
+    n = compat.axis_size(axis)
     return lax.ppermute(x, axis, [(i, (i + shift) % n) for i in range(n)])
 
 

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the rmaq kernel trio (XLA-path semantics).
+
+Each reference reproduces the exact contract of its kernel using ppermute
+collectives, so interpret-mode kernels and the XLA protocol layer can be
+cross-checked bit-for-bit (tests/test_rmaq.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core import rma
+
+
+def notified_put_ref(x: jax.Array, cnt: jax.Array, shift: int, axis: str):
+    """(payload delivered into us, notification count delivered)."""
+    delivered = rma.put_shift(x, shift, axis)
+    notif = rma.put_shift(cnt, shift, axis)
+    return delivered, notif
+
+
+def notify_accumulate_ref(cnt: jax.Array, local: jax.Array, shift: int, axis: str):
+    """local + count accumulated by the rank targeting us."""
+    return local + rma.put_shift(cnt, shift, axis)
+
+
+def queue_push_ref(buf: jax.Array, ctr: jax.Array, msgs: jax.Array,
+                   shift: int, axis: str, capacity: int):
+    """Oracle for `queue_push`: same admission, slots, and tail publish.
+
+    buf [capacity, w], ctr [2] int32 (head, tail), msgs [k, w].
+    Returns (buf', ctr', n_sent [1], n_notif [1]).
+    """
+    k = msgs.shape[0]
+    mask = capacity - 1
+
+    # fetch the target's counters (symmetric SPMD get) and admit
+    t_ctr = rma.get_shift(ctr, shift, axis)            # counters of me+shift
+    free = capacity - (t_ctr[1] - t_ctr[0])
+    accept = jnp.minimum(jnp.int32(k), free)
+
+    # the receiver's view: payloads + accept count from the rank targeting us
+    in_msgs = rma.put_shift(msgs, shift, axis)
+    in_accept = rma.put_shift(accept, shift, axis)
+
+    offs = jnp.arange(k, dtype=jnp.int32)
+    slot = (ctr[1] + offs) & mask
+    ok = offs < in_accept
+    buf = buf.at[jnp.where(ok, slot, capacity)].set(in_msgs, mode="drop")
+    ctr = ctr.at[1].add(in_accept)
+    return buf, ctr, accept[None], in_accept[None]

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _ssm_kernel(block_t: int, decay_ref, drive_ref, c_ref, y_ref, h_ref):
     it = pl.program_id(2)
@@ -67,8 +69,8 @@ def ssm_scan_pallas(
         out_specs=pl.BlockSpec((1, block_t, block_d), lambda b, id_, it: (b, it, id_)),
         out_shape=jax.ShapeDtypeStruct((B, S, d), decay.dtype),
         scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        interpret=compat.pallas_interpret_params() if interpret else False,
     )(decay, drive, c)

@@ -107,7 +107,11 @@ def moe_ffn(
     zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
 
     # ---- sort-based dispatch per group (DSDE packing, §4.2)
-    cap = max(int(capacity_factor * Tg * top_k / E), 4)
+    # floor of min(Tg, 16) keeps short sequences dropless: with a
+    # length-dependent cap, appending a token changes capacity and can
+    # (un)drop an earlier token — a causality artifact at smoke scale.
+    # Production shapes have int(cf*Tg*k/E) >> 16, so they are unaffected.
+    cap = max(int(capacity_factor * Tg * top_k / E), 4, min(Tg, 16))
     n_slots = E * cap
 
     def pack(xt_g, eidx_g, gate_g):

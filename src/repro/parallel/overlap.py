@@ -49,6 +49,18 @@ class CollectiveStrategist:
     def sync_plan(self, k_neighbors: int, p: int) -> Literal["pscw", "fence"]:
         return self.model.select_sync_mode(k_neighbors, p)
 
+    def dispatch_plan(
+        self,
+        n_msgs: int,
+        msg_bytes: float,
+        p: int,
+        capacity_per_pair: int,
+    ) -> Literal["queue", "alltoall"]:
+        """Sparse-exchange dispatch (DSDE/MoE/KV shipping): per-message
+        notified puts through an rmaq queue vs the dense capacity-padded
+        alltoall — the §6 rule over the DESIGN.md §6.5 queue model."""
+        return self.model.select_dispatch(n_msgs, msg_bytes, p, capacity_per_pair)
+
 
 # ----------------------------------------------------- gradient-sync overlap
 def bucket_grads(grads: Any, bucket_bytes: int = 32 * 2**20) -> list[list]:

@@ -1,0 +1,20 @@
+"""repro.rmaq — notified-access message channels over RMA windows.
+
+Layered on the paper's substrate (windows §2.2, one-sided ops §2.4, epochs
+§2.3), this package adds what every production RDMA system layers on top of
+bufferless put/get: *channels* — variable, asynchronous messaging between
+window ranks (RAMC-style remote-access memory channels; Taranov et al.'s
+ring-buffer write-with-notification queues).  See DESIGN.md §6.
+
+  * `notify`  — put-with-notification primitives: payload put + counter
+    accumulate in one epoch (XLA path) or DMA + remote semaphore signal
+    (Pallas path, `repro.kernels.rmaq`).
+  * `queue`   — fixed-capacity MPSC ring buffer per window rank with
+    rank-ordered fetch-and-add slot reservation, wraparound, backpressure
+    and drain; O(1) metadata (the `win_allocate` property is preserved).
+  * `channel` — typed multi-lane channels multiplexed over one queue.
+"""
+
+from . import channel, notify, queue  # noqa: F401
+
+__all__ = ["channel", "notify", "queue"]

@@ -1,0 +1,235 @@
+"""Typed multi-lane message channels multiplexed over one queue (DESIGN.md §6.3).
+
+A `Channel` gives the queue a *message* surface: each message is a typed
+payload on a named **lane** plus a 4-word header (lane id, source rank,
+user tag, payload length).  All lanes share ONE ring per rank — one
+reservation counter, one notification counter, one FIFO — and the receiver
+demultiplexes by lane id after `recv` (this mirrors how RAMC multiplexes
+logical channels over a single notified-access region: lanes are a typing
+discipline, not extra windows, so the O(1)-metadata property survives).
+
+Headers and payloads are stored bitcast into the queue's float32 cells, so
+int32/uint32/float32 payloads round-trip exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import queue as rq
+
+Array = jax.Array
+
+HDR = 4  # header words: lane_id, src_rank, tag, payload_words
+
+
+class ChannelError(RuntimeError):
+    pass
+
+
+class Lane(NamedTuple):
+    """A typed lane: fixed payload shape + 32-bit dtype."""
+
+    name: str
+    shape: tuple
+    dtype: Any = jnp.float32
+
+
+def _lane_width(lane: Lane) -> int:
+    return int(np.prod(lane.shape)) if lane.shape else 1
+
+
+def _check_dtype(dtype) -> None:
+    if jnp.dtype(dtype).itemsize != 4:
+        raise ChannelError(f"lane dtypes must be 32-bit (bitcast storage), got {dtype}")
+
+
+class RecvBatch(NamedTuple):
+    """Demux view of drained messages (owner-local)."""
+
+    lane_id: Array   # [n] int32
+    src: Array       # [n] int32
+    tag: Array       # [n] int32
+    words: Array     # [n, max_payload_words] float32 raw payload cells
+    valid: Array     # [n] bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """O(1) channel metadata: the lane table + the queue descriptor."""
+
+    lanes: tuple[Lane, ...]
+    desc: rq.QueueDescriptor
+
+    def lane_id(self, name: str) -> int:
+        for i, lane in enumerate(self.lanes):
+            if lane.name == name:
+                return i
+        raise ChannelError(f"unknown lane {name!r} (have {[l.name for l in self.lanes]})")
+
+    def lane(self, name: str) -> Lane:
+        return self.lanes[self.lane_id(name)]
+
+    @property
+    def payload_words(self) -> int:
+        return self.desc.item_width - HDR
+
+    def metadata_nbytes(self) -> int:
+        return 32 * len(self.lanes) + self.desc.metadata_nbytes()
+
+    # ------------------------------------------------------------- packing
+    def pack(self, name: str, payload: Array, tag: Array) -> Array:
+        """[k, *lane.shape] typed payload + [k] int32 tag -> [k, item] msgs."""
+        lane = self.lane(name)
+        k = payload.shape[0]
+        w = _lane_width(lane)
+        flat = payload.reshape(k, w)
+        if jnp.dtype(lane.dtype) != jnp.dtype(jnp.float32):
+            flat = lax.bitcast_convert_type(flat.astype(lane.dtype), jnp.float32)
+        pad = self.payload_words - w
+        if pad < 0:
+            raise ChannelError(f"lane {name!r} payload wider than channel item")
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        hdr_i = jnp.stack(
+            [
+                jnp.full((k,), self.lane_id(name), jnp.int32),
+                jnp.full((k,), 0, jnp.int32),  # src filled in send()
+                tag.astype(jnp.int32),
+                jnp.full((k,), w, jnp.int32),
+            ],
+            axis=1,
+        )
+        return jnp.concatenate([lax.bitcast_convert_type(hdr_i, jnp.float32), flat], axis=1)
+
+    # ------------------------------------------------- send/recv (SPMD path)
+    def send(
+        self,
+        state: rq.QueueState,
+        name: str,
+        payload: Array,
+        tag: Array,
+        dest: Array,
+    ) -> tuple[rq.QueueState, rq.EnqueueReceipt]:
+        """Collective: enqueue `payload[i]` on lane `name` at rank dest[i]
+        (-1 = skip).  Must run inside shard_map on the channel axis."""
+        msgs = self.pack(name, payload, tag)
+        me = lax.axis_index(self.desc.axis).astype(jnp.int32)
+        hdr = lax.bitcast_convert_type(msgs[:, :HDR], jnp.int32)
+        hdr = hdr.at[:, 1].set(me)
+        msgs = jnp.concatenate(
+            [lax.bitcast_convert_type(hdr, jnp.float32), msgs[:, HDR:]], axis=1
+        )
+        return rq.enqueue(self.desc, state, msgs, dest)
+
+    def recv(
+        self, state: rq.QueueState, max_n: int
+    ) -> tuple[rq.QueueState, RecvBatch]:
+        """Owner-local drain + header decode; caller demuxes with `payload`."""
+        state, items, valid = rq.dequeue(self.desc, state, max_n)
+        hdr = lax.bitcast_convert_type(items[:, :HDR], jnp.int32)
+        return state, RecvBatch(
+            lane_id=jnp.where(valid, hdr[:, 0], -1),
+            src=jnp.where(valid, hdr[:, 1], -1),
+            tag=jnp.where(valid, hdr[:, 2], -1),
+            words=items[:, HDR:],
+            valid=valid,
+        )
+
+    def payload(self, batch: RecvBatch, name: str) -> tuple[Array, Array]:
+        """Decode lane `name`'s messages from a RecvBatch.
+
+        Returns (typed [n, *lane.shape] payloads, [n] bool mask of which rows
+        belong to this lane).  Other lanes' rows are zeroed.
+        """
+        lane = self.lane(name)
+        w = _lane_width(lane)
+        mask = batch.valid & (batch.lane_id == self.lane_id(name))
+        flat = batch.words[:, :w]
+        if jnp.dtype(lane.dtype) != jnp.dtype(jnp.float32):
+            flat = lax.bitcast_convert_type(flat, lane.dtype)
+        flat = jnp.where(mask[:, None], flat, jnp.zeros_like(flat))
+        return flat.reshape((batch.words.shape[0],) + lane.shape), mask
+
+
+def channel_allocate(
+    mesh,
+    axis: str,
+    capacity: int,
+    lanes: Sequence[Lane],
+) -> tuple[Channel, rq.QueueState]:
+    """One ring per rank sized for the widest lane (+HDR header words)."""
+    lanes = tuple(Lane(l.name, tuple(l.shape), jnp.dtype(l.dtype)) for l in lanes)
+    names = [l.name for l in lanes]
+    if len(set(names)) != len(names):
+        raise ChannelError(f"duplicate lane names: {names}")
+    for lane in lanes:
+        _check_dtype(lane.dtype)
+    item_w = HDR + max(_lane_width(l) for l in lanes)
+    desc, state = rq.queue_allocate(mesh, axis, capacity, (item_w,), jnp.float32)
+    return Channel(lanes, desc), state
+
+
+# --------------------------------------------------------------- host mirror
+class HostChannel:
+    """Host-side channel over `HostQueueGroup` — same header layout, same
+    admission protocol; used by control-plane components (ft.heartbeat)."""
+
+    def __init__(self, p: int, capacity: int, lanes: Sequence[Lane]):
+        self.lanes = tuple(Lane(l.name, tuple(l.shape), np.dtype(l.dtype)) for l in lanes)
+        for lane in self.lanes:
+            if np.dtype(lane.dtype).itemsize != 4:
+                raise ChannelError(f"lane dtypes must be 32-bit, got {lane.dtype}")
+        self.payload_words = max(
+            (int(np.prod(l.shape)) if l.shape else 1) for l in self.lanes
+        )
+        self.group = rq.HostQueueGroup(p, capacity, HDR + self.payload_words, np.float32)
+        self._pending: dict[int, list[tuple[int, np.ndarray]]] = {}
+
+    def _lane_id(self, name: str) -> int:
+        for i, lane in enumerate(self.lanes):
+            if lane.name == name:
+                return i
+        raise ChannelError(f"unknown lane {name!r}")
+
+    def send(self, src: int, name: str, payload, tag: int, dest: int) -> None:
+        """Stage one message; delivered at the next `flush()` epoch."""
+        lid = self._lane_id(name)
+        lane = self.lanes[lid]
+        w = int(np.prod(lane.shape)) if lane.shape else 1
+        flat = np.asarray(payload, lane.dtype).reshape(w).view(np.float32)
+        row = np.zeros(HDR + self.payload_words, np.float32)
+        row[:HDR] = np.asarray([lid, src, tag, w], np.int32).view(np.float32)
+        row[HDR : HDR + w] = flat
+        self._pending.setdefault(src, []).append((dest, row))
+
+    def flush(self) -> dict[int, list[bool]]:
+        """Run one enqueue epoch over everything staged (the fence close)."""
+        sends, self._pending = self._pending, {}
+        return self.group.step(sends)
+
+    def recv(self, rank: int, max_n: int | None = None) -> list[dict]:
+        """Drain + demux rank's ring into decoded message dicts."""
+        out = []
+        for row in self.group.drain(rank, max_n):
+            hdr = row[:HDR].view(np.int32)
+            lane = self.lanes[int(hdr[0])]
+            w = int(hdr[3])
+            payload = row[HDR : HDR + w].view(lane.dtype).reshape(lane.shape or (1,))
+            out.append(
+                {
+                    "lane": lane.name,
+                    "src": int(hdr[1]),
+                    "tag": int(hdr[2]),
+                    "payload": payload.copy(),
+                }
+            )
+        return out
+
+    def stats(self, rank: int) -> dict:
+        return self.group.stats(rank)

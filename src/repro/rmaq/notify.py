@@ -1,0 +1,117 @@
+"""Put-with-notification primitives (DESIGN.md §6.1).
+
+A *notified put* is the composition the queue protocol is built from: the
+payload moves with a one-sided put, and a per-target notification counter is
+accumulated in the same epoch, so the target can learn "k messages arrived"
+without ever receiving a two-sided message.  This is Taranov et al.'s
+write-with-notification and the RAMC channel doorbell, expressed over the
+paper's §2.4 ops:
+
+  * **XLA path (this module)** — the notification counter is a slotted
+    accumulate (one ppermute of per-origin counts + owner-side reduce); the
+    payload is the ordinary put.  Both ride the same fence epoch, so payload
+    visibility implies counter visibility (paper §2.3 ordering).
+  * **Pallas path (`repro.kernels.rmaq`)** — the payload is an explicit
+    remote DMA and the notification is a remote semaphore signal; the
+    receiver's wait on the semaphore *is* the notification (a strict
+    improvement in bufferlessness — no counter window needed).
+
+All functions are pure and must run inside ``shard_map``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import compat
+from repro.core import rma
+from repro.core.rma import OpCounter
+
+Array = jax.Array
+
+
+# ------------------------------------------------------- notified puts (XLA)
+def notified_put_shift(
+    x: Array, counter: Array, shift: int, axis: str
+) -> tuple[Array, Array]:
+    """Put `x` to rank (r+shift) mod p and bump the target's message counter.
+
+    Returns (payload delivered into *us*, our counter incremented by the
+    number of messages that arrived).  One payload put + one counter
+    accumulate — the per-message cost the perf model's `p_notified_put`
+    charges.
+    """
+    delivered = rma.put_shift(x, shift, axis)
+    # counter transfer is the *accumulate* half of the notified put — move it
+    # with a raw ppermute so it is not double-counted as a second put (same
+    # reason put_bcast calls the unwrapped get implementation)
+    p = compat.axis_size(axis)
+    perm = [(i, (i + shift) % p) for i in range(p)]
+    arrived = lax.ppermute(jnp.uint32(1), axis, perm)
+    OpCounter.record("accs", axis=axis)
+    return delivered, counter + arrived
+
+
+def notified_put_perm(
+    x: Array, counter: Array, perm: Sequence[tuple[int, int]], axis: str
+) -> tuple[Array, Array]:
+    """Notified put along an arbitrary (src, dst) permutation.
+
+    Ranks that are not a destination in `perm` observe zero payload and an
+    unchanged counter (their notification count simply does not move).
+    """
+    delivered = rma.put_perm(x, perm, axis)
+    arrived = lax.ppermute(jnp.uint32(1), axis, list(perm))  # accumulate half
+    OpCounter.record("accs", axis=axis)
+    return delivered, counter + arrived
+
+
+def accumulate_counts(send_counts: Array, axis: str) -> Array:
+    """Notification-counter exchange: each rank accumulates `send_counts[t]`
+    into rank t's counter window; returns the per-origin counts that landed
+    *here* ([p] vector — who notified me, how many times).
+
+    This is MPI_Accumulate on an int window via the slotted protocol (§2.4):
+    one ragged all-to-all of counters, owner-side visibility.
+    """
+    OpCounter.record("accs", axis=axis)
+    return lax.all_to_all(send_counts, axis, split_axis=0, concat_axis=0)
+
+
+def fetch_and_add_ordered(x: Array, axis: str) -> tuple[Array, Array]:
+    """Rank-ordered MPI_Fetch_and_op on a shared counter (DESIGN.md §6.2).
+
+    Every rank contributes `x` (e.g. "slots I want") to a conceptually
+    shared counter; serialization is the epoch's deterministic rank order,
+    so rank r's *fetched* (old) value is the exclusive prefix sum over lower
+    ranks.  Returns (old_value_for_me, total).  This is the queue's slot
+    reservation: the same answer a hardware fetch-and-add would give if
+    origins were serviced in rank order, computed bufferlessly from one
+    counter gather.
+    """
+    all_x = lax.all_gather(x, axis)                  # counter window read
+    me = lax.axis_index(axis)
+    prefix = jnp.cumsum(all_x, axis=0) - all_x       # exclusive prefix
+    OpCounter.record("accs", axis=axis)
+    OpCounter.record("gets", axis=axis)
+    return prefix[me], jnp.sum(all_x, axis=0)
+
+
+def wait_notifications(tree, counter: Array, expected) -> tuple:
+    """Epoch-close for the notified-access pattern: pin `tree` (the payload
+    buffers) at this program point so no RMA op can be hoisted past the
+    notification check, and return (tree, counter >= expected).
+
+    On the XLA path the collectives that carried the puts already completed
+    (a finished ppermute is remotely complete, §2.3), so the "wait" is a
+    scheduling barrier plus the counter predicate; on the Pallas path the
+    literal semaphore wait lives in the kernel.
+    """
+    leaves, treedef = jax.tree.flatten((tree, counter))
+    leaves = lax.optimization_barrier(tuple(leaves))
+    tree, counter = jax.tree.unflatten(treedef, list(leaves))
+    return tree, counter >= expected

@@ -1,0 +1,211 @@
+"""Disaggregated prefill/decode serving over rmaq channels (DESIGN.md §6.7).
+
+Modern serving separates the two inference phases onto different worker
+pools: *prefill* ranks are compute-bound (process whole prompts, build the
+KV cache), *decode* ranks are memory-bound (hold many KV caches, emit one
+token per step).  The phase boundary is a bulk KV-cache transfer per
+request — variable-size, asynchronous, many-to-many: exactly a message, not
+a collective.  This engine makes `repro.rmaq` load-bearing for it:
+
+  * the mesh axis "serve" is split into prefill ranks [0, n_prefill) and
+    decode ranks [n_prefill, p);
+  * each prefill rank computes a request's KV block and **sends it over a
+    channel lane ("kv")** to its decode rank (round-robin by request id) —
+    a notified put into the decode rank's MPSC ring;
+  * decode ranks **drain their ring** each step and run attention readout
+    over the received KV to emit tokens;
+  * backpressure is admission control: when a decode rank's ring is full,
+    the prefill rank's send is rejected and the host retries the request —
+    no KV block is ever dropped or overwritten.
+
+Under SPMD every rank executes the same jitted step with role masks (a
+decode rank "computes" a zero KV block and sends to nobody; prefill ranks
+drain an always-empty ring) — the standard gang-scheduled adaptation of an
+asymmetric service, same trade as `core.dsde`'s slotted protocols.
+
+The model here is a deliberately small single-head attention stack
+(embedding KV producer + query readout decoder) so the engine runs
+end-to-end on CPU in tests and `examples/disagg_serve.py`; the channel
+mechanics — reservation, notified puts, drain, backpressure — are the
+production-shaped part and are independent of the model plugged in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.rmaq import channel as rch
+from repro.rmaq import queue as rq
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggConfig:
+    n_prefill: int = 2            # first n_prefill ranks run prefill
+    block_tokens: int = 16        # prompt tokens per request (one KV block)
+    d_model: int = 32
+    vocab: int = 97
+    queue_capacity: int = 16      # KV blocks a decode rank can hold in flight
+    max_recv_per_step: int = 4    # decode drain width per step
+
+
+class DisaggEngine:
+    """Host-orchestrated, device-stepped disaggregated serving engine."""
+
+    def __init__(self, mesh, axis: str, cfg: DisaggConfig, seed: int = 0):
+        self.mesh = mesh
+        self.axis = axis
+        self.cfg = cfg
+        self.p = mesh.shape[axis]
+        if not (0 < cfg.n_prefill < self.p):
+            raise ValueError(f"need 0 < n_prefill < {self.p}, got {cfg.n_prefill}")
+        self.n_decode = self.p - cfg.n_prefill
+
+        key = jax.random.PRNGKey(seed)
+        kk, kv, kq, ko = jax.random.split(key, 4)
+        scale = 1.0 / np.sqrt(cfg.d_model)
+        self.params = {
+            "emb_k": jax.random.normal(kk, (cfg.vocab, cfg.d_model)) * scale,
+            "emb_v": jax.random.normal(kv, (cfg.vocab, cfg.d_model)) * scale,
+            "w_q": jax.random.normal(kq, (cfg.d_model,)) * scale,
+            "readout": jax.random.normal(ko, (cfg.d_model, cfg.vocab)) * scale,
+        }
+
+        # one channel lane: a KV block [block_tokens, 2, d_model] per request
+        self.channel, self.qstate = rch.channel_allocate(
+            mesh, axis, cfg.queue_capacity,
+            lanes=[rch.Lane("kv", (cfg.block_tokens, 2, cfg.d_model), jnp.float32)],
+        )
+        self._step = self._build_step()
+
+        # host-side request tracking
+        self._pending: list[tuple[int, np.ndarray]] = []   # (req_id, tokens)
+        self._n_submitted = 0
+        self.results: dict[int, int] = {}                  # req_id -> token
+        self.retries = 0
+
+    # ----------------------------------------------------------- device step
+    def _build_step(self):
+        cfg, axis, p = self.cfg, self.axis, self.p
+        n_prefill, n_decode = cfg.n_prefill, self.n_decode
+        ch = self.channel
+        specs = rq.state_specs(axis)
+
+        def step(params, state, tokens, req_id):
+            """tokens [1, block_tokens] int32 (this rank's request, -1 = none);
+            req_id [1] int32.  Returns state', per-rank decode outputs."""
+            me = jax.lax.axis_index(axis)
+            state = rq.to_local(state)
+            toks = tokens[0]
+            rid = req_id[0]
+
+            # ---- prefill: build the KV block (masked on decode ranks)
+            is_prefill = (me < n_prefill) & (rid >= 0)
+            tok_safe = jnp.clip(toks, 0, cfg.vocab - 1)
+            kblk = params["emb_k"][tok_safe]               # [bt, d]
+            vblk = params["emb_v"][tok_safe]               # [bt, d]
+            kv_block = jnp.stack([kblk, vblk], axis=1)     # [bt, 2, d]
+
+            # ---- ship it: one channel message to the owning decode rank
+            dest = jnp.where(
+                is_prefill, n_prefill + jnp.maximum(rid, 0) % n_decode, -1
+            ).astype(jnp.int32)
+            state, receipt = ch.send(
+                state, "kv", kv_block[None], rid[None], dest[None]
+            )
+
+            # ---- decode: drain the ring, attention readout per KV block
+            state, batch = ch.recv(state, cfg.max_recv_per_step)
+            kv_in, mask = ch.payload(batch, "kv")          # [m, bt, 2, d]
+            k_in, v_in = kv_in[:, :, 0], kv_in[:, :, 1]    # [m, bt, d]
+            attn = jax.nn.softmax(
+                jnp.einsum("mtd,d->mt", k_in, params["w_q"]), axis=-1
+            )
+            ctx = jnp.einsum("mt,mtd->md", attn, v_in)     # [m, d]
+            logits = ctx @ params["readout"]               # [m, vocab]
+            out_tok = jnp.where(mask, jnp.argmax(logits, -1).astype(jnp.int32), -1)
+            out_req = jnp.where(mask, batch.tag, -1)
+
+            sent_ok = receipt.accepted[0] & is_prefill
+            return (
+                rq.to_global(state),
+                out_req[None], out_tok[None], sent_ok[None],
+            )
+
+        return jax.jit(
+            shard_map(
+                step,
+                mesh=self.mesh,
+                in_specs=(P(), specs, P(axis, None), P(axis)),
+                out_specs=(specs, P(axis, None), P(axis, None), P(axis)),
+                check_vma=False,
+            )
+        )
+
+    # ------------------------------------------------------------ host side
+    def submit(self, req_id: int, tokens) -> None:
+        toks = np.asarray(tokens, np.int32)
+        if toks.shape != (self.cfg.block_tokens,):
+            raise ValueError(f"prompt must be [{self.cfg.block_tokens}] tokens")
+        self._pending.append((req_id, toks))
+        self._n_submitted += 1
+
+    def step(self) -> int:
+        """One engine step: assign pending requests to prefill ranks, run the
+        jitted SPMD step, collect decode outputs.  Returns #tokens emitted."""
+        cfg, p = self.cfg, self.p
+        tokens = np.full((p, cfg.block_tokens), -1, np.int32)
+        req_id = np.full((p,), -1, np.int32)
+        staged: dict[int, tuple[int, np.ndarray]] = {}
+        for r in range(cfg.n_prefill):
+            if self._pending:
+                rid, toks = self._pending.pop(0)
+                tokens[r], req_id[r] = toks, rid
+                staged[r] = (rid, toks)
+
+        self.qstate, out_req, out_tok, sent_ok = self._step(
+            self.params, self.qstate, jnp.asarray(tokens), jnp.asarray(req_id)
+        )
+        out_req, out_tok = np.asarray(out_req), np.asarray(out_tok)
+        sent_ok = np.asarray(sent_ok)
+
+        # backpressure: rejected sends go back to the head of the queue
+        for r, (rid, toks) in staged.items():
+            if req_id[r] >= 0 and not bool(sent_ok[r]):
+                self._pending.insert(0, (rid, toks))
+                self.retries += 1
+
+        emitted = 0
+        for r in range(cfg.n_prefill, p):
+            for rid, tok in zip(out_req[r], out_tok[r]):
+                if rid >= 0:
+                    self.results[int(rid)] = int(tok)
+                    emitted += 1
+        return emitted
+
+    def run_until_drained(self, max_steps: int = 1000) -> dict[int, int]:
+        """Step until every submitted request has a result — including
+        requests already in flight inside the decode rings."""
+        steps = 0
+        while len(self.results) < self._n_submitted and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.results
+
+    # ----------------------------------------------------------- reference
+    def reference(self, tokens) -> int:
+        """Single-host oracle: what the disaggregated path must produce."""
+        toks = jnp.clip(jnp.asarray(tokens, jnp.int32), 0, self.cfg.vocab - 1)
+        k = self.params["emb_k"][toks]
+        v = self.params["emb_v"][toks]
+        attn = jax.nn.softmax(k @ self.params["w_q"])
+        logits = (attn @ v) @ self.params["readout"]
+        return int(jnp.argmax(logits))
+
+    def queue_stats(self) -> dict:
+        return {k: np.asarray(v) for k, v in rq.stats(self.qstate).items()}

@@ -7,7 +7,9 @@ XLA_FLAGS=--xla_force_host_platform_device_count=N set before jax imports.
 
 from __future__ import annotations
 
+import functools
 import os
+import random
 import subprocess
 import sys
 
@@ -29,3 +31,79 @@ def run_subtest(name: str, devices: int = 8, timeout: int = 900, args: list[str]
             f"--- stdout ---\n{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}"
         )
     return proc.stdout
+
+
+# --------------------------------------------------------------------------
+# hypothesis shim: property tests degrade to deterministic example-based
+# tests when `hypothesis` is not installed (offline images), instead of
+# breaking collection of every module that imports it.  Test modules import
+# `given/settings/st` from here rather than from hypothesis directly.
+# --------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Examples:
+        """Stand-in for a hypothesis strategy: a fixed example pool."""
+
+        def __init__(self, values):
+            self.values = list(values)
+
+    class _StShim:
+        @staticmethod
+        def integers(min_value, max_value):
+            rng = random.Random(f"int:{min_value}:{max_value}")
+            vals = {min_value, max_value, (min_value + max_value) // 2}
+            while len(vals) < 12:
+                vals.add(rng.randint(min_value, max_value))
+            return _Examples(sorted(vals))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            rng = random.Random(f"float:{min_value}:{max_value}")
+            vals = [min_value, max_value, (min_value + max_value) / 2.0]
+            vals += [rng.uniform(min_value, max_value) for _ in range(9)]
+            return _Examples(vals)
+
+        @staticmethod
+        def sampled_from(options):
+            return _Examples(options)
+
+    st = _StShim()
+
+    def given(*gargs, **gkwargs):
+        strategies = list(gargs) + list(gkwargs.values())
+        n_cases = max(len(s.values) for s in strategies)
+
+        def deco(fn):
+            def runner(*args, **kwargs):
+                for i in range(n_cases):
+                    pos = [s.values[i % len(s.values)] for s in gargs]
+                    kw = {k: s.values[i % len(s.values)] for k, s in gkwargs.items()}
+                    fn(*args, *pos, **kwargs, **kw)
+
+            # expose a signature without the strategy-bound parameters, or
+            # pytest would treat them as fixtures (positional strategies bind
+            # the trailing positional params, like hypothesis does)
+            import inspect
+
+            sig = inspect.signature(fn)
+            params = [p for p in sig.parameters.values() if p.name not in gkwargs]
+            if gargs:
+                params = params[: -len(gargs)]
+            runner.__signature__ = sig.replace(parameters=params)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

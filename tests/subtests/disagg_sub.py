@@ -1,0 +1,43 @@
+"""Multi-device: disaggregated prefill/decode serving over rmaq channels.
+
+Every emitted token must match the single-host reference, KV blocks must
+flow only into decode ranks' rings, and backpressure must retry (not drop)
+requests when the decode rings are undersized."""
+import jax
+import numpy as np
+
+from repro.serve.disagg import DisaggConfig, DisaggEngine
+
+n = len(jax.devices())
+mesh = jax.make_mesh((n,), ("serve",))
+
+cfg = DisaggConfig(n_prefill=n // 2, block_tokens=8, d_model=16, vocab=61,
+                   queue_capacity=8, max_recv_per_step=2)
+eng = DisaggEngine(mesh, "serve", cfg, seed=3)
+
+rng = np.random.RandomState(0)
+prompts = {i: rng.randint(0, cfg.vocab, size=cfg.block_tokens) for i in range(9)}
+for rid, toks in prompts.items():
+    eng.submit(rid, toks)
+res = eng.run_until_drained()
+assert len(res) == len(prompts), res
+for rid, toks in prompts.items():
+    assert res[rid] == eng.reference(toks), rid
+stats = eng.queue_stats()
+assert stats["enqueued"][: cfg.n_prefill].sum() == 0   # prefill rings stay empty
+assert stats["enqueued"].sum() == len(prompts)         # one KV block per request
+assert stats["notifications"].sum() == len(prompts)
+print(f"PASS disagg serve: {len(res)} tokens == reference; "
+      f"kv blocks per decode rank = {stats['enqueued'][cfg.n_prefill:]}")
+
+# tiny decode ring (capacity 2, drain 1) forces backpressure retries
+cfg2 = DisaggConfig(n_prefill=n // 2, block_tokens=8, d_model=16, vocab=61,
+                    queue_capacity=2, max_recv_per_step=1)
+eng2 = DisaggEngine(mesh, "serve", cfg2, seed=3)
+for rid, toks in prompts.items():
+    eng2.submit(rid, toks)
+res2 = eng2.run_until_drained()
+assert len(res2) == len(prompts)
+for rid, toks in prompts.items():
+    assert res2[rid] == eng2.reference(toks), rid
+print(f"PASS disagg backpressure: retries={eng2.retries}, no request lost")

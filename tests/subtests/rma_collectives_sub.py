@@ -5,7 +5,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives, dsde, rma

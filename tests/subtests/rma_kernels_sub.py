@@ -3,7 +3,7 @@ import sys
 import functools
 import jax, jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.kernels.rma import ops, ref
 

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from .helpers import given, settings, st
 
 from repro.core import locks_sim, window
 from repro.core.perfmodel import DEFAULT_MODEL, V5E, PerfModel, roofline_terms

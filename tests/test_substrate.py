@@ -8,10 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.ckpt.checkpoint import CheckpointManager
+
+from .helpers import given, settings, st
 from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
 from repro.ft.heartbeat import HeartbeatConfig, HeartbeatMonitor
 from repro.launch import hlo_cost
@@ -209,7 +210,9 @@ class TestHloCost:
         analytic = 8 * 2 * 16 * 64 * 64
         assert 0.9 * analytic < s.flops < 2.0 * analytic, s.flops
         # XLA's own counter must be ~1/8 of ours (loop counted once)
-        xla = c.cost_analysis()["flops"]
+        from repro.compat import cost_analysis
+
+        xla = cost_analysis(c)["flops"]
         assert s.flops > 4 * xla
 
     def test_dot_flops_exact_without_loops(self):
