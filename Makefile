@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench example-disagg
+.PHONY: test test-fast bench bench-smoke lint example-disagg
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -13,6 +13,14 @@ test-fast:
 
 bench:
 	$(PYTHON) benchmarks/run.py
+
+# fast subset: message-rate bench + BENCH_rma_plan.json (eager vs coalesced
+# counts + modeled latency) — seeds the perf trajectory without the full run
+bench-smoke:
+	$(PYTHON) benchmarks/run.py --smoke
+
+lint:
+	ruff check src tests benchmarks examples
 
 example-disagg:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \

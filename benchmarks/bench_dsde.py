@@ -1,9 +1,6 @@
 """Paper Fig. 7b: dynamic sparse data exchange — accumulate protocol vs
 alltoall / reduce-scatter baselines, k=6 random neighbors per process."""
-import functools
-
 import jax
-import jax.numpy as jnp
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 

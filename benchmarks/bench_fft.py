@@ -6,7 +6,6 @@ transpose, FFT over the third.  The overlap variant starts each slab's
 exchange as soon as that slab's local FFT finishes (paper: "communicate the
 data of a plane as soon as it is available").
 """
-import functools
 
 import jax
 import jax.numpy as jnp

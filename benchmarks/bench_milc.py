@@ -1,14 +1,12 @@
 """Paper Fig. 8 / §4.4: MILC-style 4D stencil — one-sided halo exchange +
 overlapped compute vs bulk-synchronous message-passing formulation."""
-import functools
-
 import jax
 import jax.numpy as jnp
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import emit, time_fn
-from repro.core import collectives, rma
+from repro.core import collectives
 from repro.core.epoch import PSCWEpoch
 
 

@@ -13,7 +13,6 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import emit, time_fn
 from repro.core import collectives
-from repro.core.perfmodel import DEFAULT_MODEL
 from repro.parallel.overlap import CollectiveStrategist
 
 

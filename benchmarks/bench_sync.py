@@ -4,7 +4,6 @@ Fence is measured at growing process counts (dissemination psum); PSCW on a
 ring (k=2) should be ~constant in p — the paper's headline scalability plot.
 Lock/unlock/flush constants come from the faithful host-protocol simulation.
 """
-import functools
 import time
 
 import jax

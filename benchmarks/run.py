@@ -2,10 +2,17 @@
 
 Each bench runs in its own subprocess with forced host devices (the main
 process keeps 1 CPU device).  Output: ``name,us_per_call,derived`` CSV.
+
+The harness also emits ``BENCH_rma_plan.json`` — eager vs coalesced message
+counts (traced through `OpCounter`) plus the §8 model's latency for both
+paths and the aggregation crossover — seeding the perf trajectory for the
+deferred substrate.  ``--smoke`` runs just that emission plus the
+message-rate bench (the `make bench-smoke` target).
 """
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -25,12 +32,83 @@ BENCHES = [
     ("benchmarks.bench_roofline", 1, "roofline from dry-run"),
 ]
 
+SMOKE_BENCHES = [
+    ("benchmarks.bench_message_rate", 4, "Fig 5b-c message rate (smoke)"),
+]
+
+
+def emit_rma_plan_json(path: str = "BENCH_rma_plan.json", k: int = 32,
+                       msg_bytes: int = 8) -> dict:
+    """Trace a k-put epoch eagerly and as one coalesced plan; write counts
+    and the §8 model's latency for both paths (the perf-trajectory seed)."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import plan as plan_mod, rma
+    from repro.core.perfmodel import DEFAULT_MODEL
+    from repro.core.rma import OpCounter
+
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("x",))
+    sm = functools.partial(shard_map, mesh=mesh, check_vma=False)
+    words = max(1, msg_bytes // 4)
+    x = jnp.zeros((n, k, words), jnp.float32)
+
+    def eager(v):
+        return jnp.stack([rma.put_shift(v[0, i], 1, "x") for i in range(k)])[None]
+
+    def coalesced(v):
+        pl = plan_mod.RmaPlan("x")
+        hs = [pl.put_shift(v[0, i], 1) for i in range(k)]
+        pl.flush(aggregate=True)
+        return jnp.stack([h.result() for h in hs])[None]
+
+    spec = P("x", None, None)
+    counts = {}
+    for name, fn in (("eager", eager), ("coalesced", coalesced)):
+        with OpCounter() as c:
+            jax.eval_shape(sm(fn, in_specs=spec, out_specs=spec), x)
+        counts[name] = c
+
+    m = DEFAULT_MODEL
+    out = {
+        "k_msgs": k,
+        "msg_bytes": msg_bytes,
+        "eager": {
+            "raw_msgs": counts["eager"].raw_msgs,
+            "wire_transfers": counts["eager"].coalesced_msgs,
+            "modeled_us": m.p_direct_transfers(k, msg_bytes) * 1e6,
+        },
+        "coalesced": {
+            "raw_msgs": counts["coalesced"].raw_msgs,
+            "wire_transfers": counts["coalesced"].coalesced_msgs,
+            "modeled_us": m.p_packed_transfer(k, msg_bytes) * 1e6,
+        },
+        "aggregation_factor": counts["coalesced"].aggregation_factor,
+        "modeled_speedup": (
+            m.p_direct_transfers(k, msg_bytes) / m.p_packed_transfer(k, msg_bytes)
+        ),
+        "crossover_bytes_n16": m.aggregation_crossover_bytes(16),
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}: raw={out['eager']['raw_msgs']} -> "
+          f"wire={out['coalesced']['wire_transfers']} "
+          f"(modeled {out['modeled_speedup']:.1f}x on {msg_bytes}B msgs)",
+          flush=True)
+    return out
+
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv[1:]
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     print("name,us_per_call,derived")
     failures = 0
-    for mod, devices, fig in BENCHES:
+    for mod, devices, fig in (SMOKE_BENCHES if smoke else BENCHES):
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
         env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root + os.pathsep + env.get("PYTHONPATH", "")
@@ -42,6 +120,7 @@ def main() -> None:
             print(f"# FAILED {mod}: {proc.stderr.strip().splitlines()[-1] if proc.stderr else '?'}",
                   flush=True)
         sys.stdout.write(proc.stdout)
+    emit_rma_plan_json(os.path.join(root, "BENCH_rma_plan.json"))
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
 

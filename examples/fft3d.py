@@ -5,7 +5,6 @@ Validates the pencil-decomposed FFT against a single-device jnp.fft.fftn.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/fft3d.py
 """
-import functools
 
 import jax
 import jax.numpy as jnp

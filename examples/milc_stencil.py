@@ -6,7 +6,6 @@ of sync mode (k=2 => PSCW), and agreement with a single-device stencil.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/milc_stencil.py
 """
-import functools
 
 import jax
 import jax.numpy as jnp

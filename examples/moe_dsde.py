@@ -8,7 +8,6 @@ to the same exchange; and that token->expert assignment is conserved.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/moe_dsde.py
 """
-import functools
 
 import jax
 import jax.numpy as jnp

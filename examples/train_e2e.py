@@ -12,7 +12,6 @@ checkpoints -> resume.
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax

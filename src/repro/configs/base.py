@@ -9,7 +9,7 @@ input-shape set shared by all LM-family archs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

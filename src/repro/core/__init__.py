@@ -1,5 +1,31 @@
-"""Core RMA runtime: the paper's contribution as composable JAX modules."""
+"""Core RMA runtime: the paper's contribution as composable JAX modules.
 
-from . import collectives, dsde, epoch, hashtable, locks_sim, perfmodel, rma, window
+`plan` is the deferred one-sided substrate (DESIGN.md §8): every other
+module's communication is either a single-op plan (the eager `rma` surface)
+or an epoch-scoped plan that coalesces same-signature ops into fused wire
+transfers with model-guided backend dispatch.
+"""
 
-__all__ = ["collectives", "dsde", "epoch", "hashtable", "locks_sim", "perfmodel", "rma", "window"]
+from . import (
+    collectives,
+    dsde,
+    epoch,
+    hashtable,
+    locks_sim,
+    perfmodel,
+    plan,
+    rma,
+    window,
+)
+
+__all__ = [
+    "collectives",
+    "dsde",
+    "epoch",
+    "hashtable",
+    "locks_sim",
+    "perfmodel",
+    "plan",
+    "rma",
+    "window",
+]

@@ -4,16 +4,18 @@ The paper demonstrates that application-level communication patterns (halo
 exchange in MILC, slab exchange in FFT, DSDE) built on put/get + scalable
 sync outperform message-passing formulations.  These schedules are that idea
 packaged: every collective below is composed **only** of `repro.core.rma`
-one-sided ops and epoch barriers, and is a drop-in alternative to the native
-XLA collective.  The perf layer (`parallel/overlap.py`) chooses between the
-native op and an RMA schedule using the §3 performance models.
+one-sided ops, epoch barriers, and (where an epoch issues several ops — the
+halo exchange, the bidirectional ring step) epoch-scoped `repro.core.plan`
+plans, and is a drop-in alternative to the native XLA collective.  The perf
+layer (`parallel/overlap.py`) chooses between the native op and an RMA
+schedule using the §3 performance models, and between XLA and Pallas
+lowerings via the §8 backend dispatch.
 
 All functions assume they are called inside ``shard_map``.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
@@ -22,7 +24,7 @@ from jax import lax
 
 from repro import compat
 
-from . import rma
+from . import plan as plan_mod, rma
 
 
 Array = jax.Array
@@ -63,8 +65,14 @@ def ring_all_gather(x: Array, axis: str, bidirectional: bool = True) -> Array:
 
     def body(i, carry):
         out, fwd, bwd = carry
-        fwd = rma.put_shift(fwd, +1, axis)
-        bwd = rma.put_shift(bwd, -1, axis)
+        # both directions of one ring step form one plan (an access epoch):
+        # the permutations differ so they stay separate wire transfers, but
+        # they share backend dispatch and raw/coalesced accounting
+        step_plan = plan_mod.RmaPlan(axis)
+        h_f = step_plan.put_shift(fwd, +1)
+        h_b = step_plan.put_shift(bwd, -1)
+        step_plan.flush()
+        fwd, bwd = h_f.result(), h_b.result()
         src_f = (me - i - 1) % p
         src_b = (me + i + 1) % p
         out = lax.cond(
@@ -155,9 +163,14 @@ def halo_exchange_1d(x: Array, halo: int, axis: str, dim: int = 0) -> Array:
     """
     lo = lax.slice_in_dim(x, 0, halo, axis=dim)
     hi = lax.slice_in_dim(x, x.shape[dim] - halo, x.shape[dim], axis=dim)
-    from_left = rma.put_shift(hi, +1, axis)   # left neighbor's high rows
-    from_right = rma.put_shift(lo, -1, axis)  # right neighbor's low rows
-    return jnp.concatenate([from_left, x, from_right], axis=dim)
+    # one plan per halo epoch: two puts (O(k), k=2) recorded together and
+    # flushed at the epoch close — the configuration where the paper's
+    # model says PSCW beats fence
+    ep = plan_mod.RmaPlan(axis)
+    h_left = ep.put_shift(hi, +1)    # left neighbor's high rows
+    h_right = ep.put_shift(lo, -1)   # right neighbor's low rows
+    ep.flush()
+    return jnp.concatenate([h_left.result(), x, h_right.result()], axis=dim)
 
 
 def halo_exchange_nd(x: Array, halos: dict[str, int], axis_dims: dict[str, int]) -> Array:

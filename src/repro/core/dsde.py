@@ -14,6 +14,10 @@ protocol beats alltoall/reduce_scatter/NBX by 2x–100x.  The protocol:
 This file implements the protocol under SPMD (counts via slotted accumulate
 = one ragged all-to-all of counters; payload via capacity-bounded one-sided
 puts) plus the three baseline protocols from [15] it is benchmarked against.
+Since the deferred substrate (DESIGN.md §8) each exchange records its
+counter accumulate, payload puts and validity mask into ONE epoch-scoped
+`RmaPlan`, so the whole protocol coalesces into a single fused wire
+transfer whenever the §8 aggregation model says packing wins.
 **MoE token dispatch is literally this motif** — tokens are items, experts
 are targets, nobody knows per-expert receive counts — so `moe_dispatch`
 below is both the paper reproduction and the framework's EP substrate.
@@ -21,7 +25,6 @@ below is both the paper reproduction and the framework's EP substrate.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -30,7 +33,7 @@ from jax import lax
 
 from repro import compat
 
-from . import rma, collectives
+from . import collectives, plan as plan_mod, rma  # noqa: F401  (rma: API re-export site)
 
 
 Array = jax.Array
@@ -62,10 +65,15 @@ def exchange_accumulate(
     p = compat.axis_size(axis)
     n = data.shape[0]
 
+    # one epoch-scoped plan (DESIGN.md §8): the counter accumulate and the
+    # payload puts are recorded together and flushed as coalesced transfers
+    # (for small per-pair slots the whole protocol is ONE wire message).
+    xplan = plan_mod.RmaPlan(axis)
+
     # ---- step 1: per-target counts, accumulated into each target's counter
     onehot = jax.nn.one_hot(targets, p, dtype=jnp.int32)          # [n, p]
     send_counts = onehot.sum(axis=0)                               # [p]
-    recv_counts = collectives.all_to_all(send_counts, axis)        # counter window
+    h_counts = xplan.put_all_to_all(send_counts, kind="accs")      # counter window
 
     # ---- step 2: pack items into per-target slot buffers (origin side)
     # order items by target; position within target = fetch-and-add result
@@ -87,8 +95,12 @@ def exchange_accumulate(
     # ---- step 3: one-sided puts of each slot range into its target window
     slots = slots.reshape(p, capacity_per_pair, -1)
     valid = valid.reshape(p, capacity_per_pair)
-    recv = collectives.all_to_all(slots, axis)                     # [p, cap, d]
-    recv_valid = collectives.all_to_all(valid, axis)               # [p, cap]
+    h_recv = xplan.put_all_to_all(slots, kind="puts")              # [p, cap, d]
+    h_valid = xplan.put_all_to_all(valid, kind=None)               # [p, cap]
+    xplan.flush()
+    recv_counts = h_counts.result()
+    recv = h_recv.result()
+    recv_valid = h_valid.result()
 
     return DSDEResult(
         recv_data=recv.reshape(p * capacity_per_pair, -1),
@@ -219,11 +231,18 @@ def moe_dispatch(
     sbuf = jnp.zeros((n_slots,), jnp.int32).at[slot].set(src, mode="drop")
     vbuf = jnp.zeros((n_slots,), jnp.bool_).at[slot].set(ok, mode="drop")
 
-    # one-sided exchange: slot ranges fly to their owning rank
-    recv = collectives.all_to_all(buf.reshape(p, local_e * cap, d), axis)
-    recv_g = collectives.all_to_all(gbuf.reshape(p, local_e * cap), axis)
-    recv_s = collectives.all_to_all(sbuf.reshape(p, local_e * cap), axis)
-    recv_v = collectives.all_to_all(vbuf.reshape(p, local_e * cap), axis)
+    # one-sided exchange: slot ranges fly to their owning rank — tokens,
+    # gates, source indices and validity coalesce into one fused transfer
+    # when the model says packing wins (small per-pair payloads always do)
+    dplan = plan_mod.RmaPlan(axis)
+    h_t = dplan.put_all_to_all(buf.reshape(p, local_e * cap, d), kind="puts")
+    h_g = dplan.put_all_to_all(gbuf.reshape(p, local_e * cap), kind=None)
+    h_s = dplan.put_all_to_all(sbuf.reshape(p, local_e * cap), kind=None)
+    h_v = dplan.put_all_to_all(vbuf.reshape(p, local_e * cap), kind=None)
+    dplan.flush()
+    recv, recv_g, recv_s, recv_v = (
+        h_t.result(), h_g.result(), h_s.result(), h_v.result()
+    )
 
     # regroup: [p, local_e, cap] -> [local_e, p*cap]
     def regroup(a):
@@ -264,9 +283,12 @@ def moe_combine(
     idx_back = (dispatch.combine_idx % n_tok).reshape(local_e, p, cap).transpose(1, 0, 2).reshape(p, local_e * cap)
     val_back = dispatch.combine_valid.reshape(local_e, p, cap).transpose(1, 0, 2).reshape(p, local_e * cap)
 
-    recv = collectives.all_to_all(back, axis)        # [p, local_e*cap, d]
-    recv_idx = collectives.all_to_all(idx_back, axis)
-    recv_val = collectives.all_to_all(val_back, axis)
+    cplan = plan_mod.RmaPlan(axis)
+    h_b = cplan.put_all_to_all(back, kind="puts")    # [p, local_e*cap, d]
+    h_i = cplan.put_all_to_all(idx_back, kind=None)
+    h_v = cplan.put_all_to_all(val_back, kind=None)
+    cplan.flush()
+    recv, recv_idx, recv_val = h_b.result(), h_i.result(), h_v.result()
 
     out = jnp.zeros((n_tok, d), expert_outputs.dtype)
     flat = recv.reshape(-1, d)

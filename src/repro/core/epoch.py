@@ -18,6 +18,13 @@ O(1) locks, bufferlessly.  Under XLA SPMD:
     unnecessary on TPU because semaphores are allocated statically per
     kernel — a *strict improvement* in bufferlessness).
 
+Since the deferred-substrate refactor (DESIGN.md §8) every epoch is also a
+**plan scope**: `begin_plan()` hands out a `repro.core.plan.RmaPlan` whose
+recorded ops are coalesced and flushed when the epoch closes, and the
+epoch's `SyncStats` counts both raw (recorded) and coalesced (wire)
+messages.  `flush`/`flush_local` record into the active `SyncStats` ledger
+so the complexity tests can assert synchronization-message counts too.
+
 The epoch objects also count synchronization messages so tests can assert
 the paper's complexity bounds, and they consult the perf model to choose
 fence-vs-PSCW automatically (paper §6's model-guided selection).
@@ -26,10 +33,9 @@ fence-vs-PSCW automatically (paper §6's model-guided selection).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+from typing import Any, ClassVar, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 
 from .perfmodel import DEFAULT_MODEL, PerfModel
@@ -45,26 +51,85 @@ def _barrier_all(tree: Any) -> Any:
     return jax.tree.unflatten(treedef, list(leaves))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SyncStats:
-    """Messages issued by synchronization calls (not payload ops)."""
+    """Messages issued by synchronization calls (not payload ops).
+
+    Usable as a context manager: while active it also receives the
+    module-level `flush`/`flush_local` accounting, mirroring how
+    `OpCounter` scopes payload-op counts.  Identity (not value) equality:
+    the active-ledger membership below must distinguish two all-zero
+    instances.
+    """
 
     post_msgs: int = 0
     complete_msgs: int = 0
     start_msgs: int = 0
     wait_msgs: int = 0
     barrier_stages: int = 0
+    flush_msgs: int = 0
+    flush_local_msgs: int = 0
+    # deferred-substrate accounting (DESIGN.md §8): payload ops recorded in
+    # this epoch's plan vs wire transfers issued at its closing flush
+    raw_msgs: int = 0
+    coalesced_msgs: int = 0
+
+    _ACTIVE: ClassVar[list["SyncStats"]] = []
+
+    def __enter__(self) -> "SyncStats":
+        SyncStats._ACTIVE.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        SyncStats._ACTIVE.remove(self)
+
+    @classmethod
+    def record(cls, field: str, n: int = 1,
+               also: Optional["SyncStats"] = None) -> None:
+        targets = list(cls._ACTIVE)
+        if also is not None and also not in targets:
+            targets.append(also)
+        for s in targets:
+            setattr(s, field, getattr(s, field) + n)
+
+
+class _PlanScope:
+    """Mixin making an epoch a recording scope for a deferred `RmaPlan`.
+
+    Ops recorded through `begin_plan()` are issued — coalesced per §8 — when
+    the epoch closes (`close`/`complete`/`unlock`), and the epoch's stats
+    pick up the raw/coalesced message counts.
+    """
+
+    _plan = None
+
+    def begin_plan(self, strategist: Any = None):
+        from .plan import RmaPlan  # lazy: plan.py imports epoch classes
+
+        self._plan = RmaPlan(self.axis, model=self.model, strategist=strategist)
+        return self._plan
+
+    @property
+    def plan(self):
+        return self._plan
+
+    def _flush_plan(self, aggregate: Optional[bool] = None,
+                    backend: str = "auto") -> None:
+        if self._plan is not None and not self._plan.flushed:
+            ps = self._plan.flush(aggregate=aggregate, backend=backend)
+            self.stats.raw_msgs += ps.raw
+            self.stats.coalesced_msgs += ps.coalesced
 
 
 # ------------------------------------------------------------------- fence
-class FenceEpoch:
+class FenceEpoch(_PlanScope):
     """MPI_Win_fence ... MPI_Win_fence: bulk-synchronous epoch, O(log p) time.
 
     Usage (functional):
         ep = FenceEpoch(axis, p)
         x = ep.open(x)           # fence: close previous epoch, open this one
-        ... RMA ops on x ...
-        x = ep.close(x)          # fence: commit + barrier
+        ... RMA ops on x (eager, or recorded via ep.begin_plan()) ...
+        x = ep.close(x)          # plan flush (coalesced) + fence commit
     """
 
     def __init__(self, axis: str, p: int, model: PerfModel = DEFAULT_MODEL):
@@ -77,10 +142,12 @@ class FenceEpoch:
         return _barrier_all(tree)
 
     def close(self, tree: Any) -> Any:
-        # commit remote ops (gsync/mfence analogue): dataflow barrier, then a
-        # log(p) dissemination barrier carried by a scalar psum on the axis.
+        # commit remote ops (gsync/mfence analogue): flush any recorded plan,
+        # dataflow barrier, then a log(p) dissemination barrier carried by a
+        # scalar psum on the axis.
         import math
 
+        self._flush_plan()
         tree = _barrier_all(tree)
         self.stats.barrier_stages += max(1, int(math.ceil(math.log2(max(self.p, 2)))))
         return tree
@@ -90,7 +157,7 @@ class FenceEpoch:
 
 
 # -------------------------------------------------------------------- PSCW
-class PSCWEpoch:
+class PSCWEpoch(_PlanScope):
     """General active target sync (post/start/complete/wait), O(k) msgs.
 
     The scalable protocol (paper Fig. 2): each poster announces itself to the
@@ -124,6 +191,7 @@ class PSCWEpoch:
         return _barrier_all(tree)
 
     def complete(self, tree: Any) -> Any:
+        self._flush_plan()
         self.stats.complete_msgs += self.k  # completion-counter increments
         return _barrier_all(tree)
 
@@ -132,7 +200,7 @@ class PSCWEpoch:
 
 
 # ------------------------------------------------------------------- locks
-class SharedLockEpoch:
+class SharedLockEpoch(_PlanScope):
     """Passive-target *shared* locks (MPI_Win_lock SHARED / lock_all).
 
     Reader counting maps to TPU semaphore arithmetic and costs O(1) ops —
@@ -146,6 +214,7 @@ class SharedLockEpoch:
         self.axis = axis
         self.model = model
         self.locked = False
+        self.stats = SyncStats()
 
     def lock(self, tree: Any) -> Any:
         self.locked = True
@@ -153,6 +222,7 @@ class SharedLockEpoch:
         return _barrier_all(tree)
 
     def unlock(self, tree: Any) -> Any:
+        self._flush_plan()
         self.locked = False
         OpCounter.record("accs")  # one remote atomic decrement
         return _barrier_all(tree)
@@ -162,20 +232,23 @@ class SharedLockEpoch:
 
 
 # ------------------------------------------------------------------- flush
-def flush(tree: Any) -> Any:
+def flush(tree: Any, stats: Optional[SyncStats] = None) -> Any:
     """MPI_Win_flush: remote completion of all pending ops from this origin.
 
     On the XLA path a completed ppermute *is* remotely complete, so flush is
     a scheduling barrier (the compiler must not defer the op past this
     point).  On the Pallas path flush is `rdma.wait()` — a DMA semaphore
     wait, the literal gsync analogue (paper: 78 instructions; here: one
-    semaphore wait).
+    semaphore wait).  Records one flush message into the active `SyncStats`
+    ledger (and `stats` when given) so sync accounting sees it.
     """
+    SyncStats.record("flush_msgs", also=stats)
     return _barrier_all(tree)
 
 
-def flush_local(tree: Any) -> Any:
+def flush_local(tree: Any, stats: Optional[SyncStats] = None) -> Any:
     """MPI_Win_flush_local: local buffer reuse safety — same lowering."""
+    SyncStats.record("flush_local_msgs", also=stats)
     return _barrier_all(tree)
 
 

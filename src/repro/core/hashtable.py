@@ -27,7 +27,7 @@ from jax import lax
 
 from repro import compat
 
-from . import collectives, dsde
+from . import dsde, plan as plan_mod
 
 
 Array = jax.Array
@@ -181,11 +181,16 @@ def lookup_epoch(vol: LocalVolume, keys: Array, axis: str, capacity_per_pair: in
     vals, found, _ = lax.fori_loop(0, max_chain, walk, (vals, found, nxt))
 
     # answers fly back one-sided: route by origin rank encoded in slots
-    # slot layout of exchange_accumulate is [src_rank, cap] ordered
+    # slot layout of exchange_accumulate is [src_rank, cap] ordered; the
+    # answer payload and its validity mask share one fused transfer (§8)
     cap = res.recv_data.shape[0] // p
     ans = jnp.stack([rqid, vals, found.astype(jnp.int64)], axis=1).reshape(p, cap, 3)
-    back = collectives.all_to_all(ans, axis).reshape(p * cap, 3)
-    back_valid = collectives.all_to_all(res.recv_valid.reshape(p, cap), axis).reshape(-1)
+    hplan = plan_mod.RmaPlan(axis)
+    h_back = hplan.put_all_to_all(ans, kind="puts")
+    h_bval = hplan.put_all_to_all(res.recv_valid.reshape(p, cap), kind=None)
+    hplan.flush()
+    back = h_back.result().reshape(p * cap, 3)
+    back_valid = h_bval.result().reshape(-1)
 
     out_vals = jnp.zeros((n,), jnp.int64)
     out_found = jnp.zeros((n,), jnp.bool_)

@@ -75,6 +75,63 @@ class PerfModel:
         """Per-message injection overhead (paper Fig. 5b: 416 ns inter-node)."""
         return max(0.416e-6, nbytes / self.hw.ici_link_bandwidth)
 
+    # -- plan aggregation (deferred substrate, DESIGN.md §8) ---------------
+    def p_direct_transfers(self, n_msgs: int, msg_bytes: float) -> float:
+        """n pipelined per-op transfers: injection-rate bound for small
+        payloads, link-bandwidth bound for large (the two Fig. 5b regimes)."""
+        return n_msgs * self.p_message_rate(msg_bytes)
+
+    def p_packed_transfer(self, n_msgs: int, msg_bytes: float,
+                          hops: int = 1) -> float:
+        """One aggregated transfer of n packed messages: a single issue
+        latency + the combined payload on the wire + the origin-side gather
+        and target-side scatter copies (HBM round trips) packing costs."""
+        total = n_msgs * msg_bytes
+        copies = 4.0 * total / self.hw.hbm_bandwidth  # pack (2x) + unpack (2x)
+        return hops * self.hw.ici_latency_per_hop + total / self.hw.ici_link_bandwidth + copies
+
+    def select_aggregation(self, n_msgs: int, msg_bytes: float,
+                           hops: int = 1) -> Literal["pack", "direct"]:
+        """§6-style rule for plan flush: pack same-signature ops into one
+        wire transfer vs issue them individually.
+
+        Small messages are injection-rate-limited, so one packed transfer
+        amortizes the per-message overhead across the group; past the
+        message-rate crossover (~ici_link_bandwidth x 416 ns ≈ 20 KiB on
+        v5e) each message already saturates the link and packing only adds
+        the HBM copy cost.  This reproduces the paper's Fig. 5b rate-vs-
+        bandwidth regime boundary as a dispatch rule.
+        """
+        if n_msgs <= 1:
+            return "direct"
+        packed = self.p_packed_transfer(n_msgs, msg_bytes, hops)
+        direct = self.p_direct_transfers(n_msgs, msg_bytes)
+        return "pack" if packed < direct else "direct"
+
+    def aggregation_crossover_bytes(self, n_msgs: int = 16) -> float:
+        """Smallest per-message size (geometric scan) where packing stops
+        winning — the modeled Fig. 5b crossover, used by the benchmarks."""
+        s = 8.0
+        while s < 64 * 2**20:
+            if self.select_aggregation(n_msgs, s) == "direct":
+                return s
+            s *= 2.0
+        return s
+
+    def select_put_backend(self, nbytes: float) -> Literal["xla", "pallas"]:
+        """Model-guided put lowering: the explicit-DMA Pallas path wins once
+        the payload is large enough that origin-controlled DMA timing beats
+        the scheduled XLA collective (which pays an extra fusion/scheduling
+        latency but has no kernel-launch cost).  Both paths are bandwidth
+        bound at the limit, so the rule is a simple size threshold derived
+        from the two fixed costs."""
+        t_xla = self.hw.ici_latency_per_hop + nbytes / self.hw.ici_link_bandwidth
+        # kernel launch + semaphore pair setup, amortized by DMA pipelining
+        t_pallas = 2.0 * self.hw.sem_op_latency + 0.9 * (
+            self.hw.ici_latency_per_hop + nbytes / self.hw.ici_link_bandwidth
+        )
+        return "pallas" if t_pallas < t_xla else "xla"
+
     # -- synchronization (paper §3.2 / Fig. 6) ----------------------------
     def p_fence(self, p: int) -> float:
         return self.hw.barrier_latency_factor * max(1.0, math.log2(max(p, 2)))

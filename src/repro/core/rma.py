@@ -14,6 +14,13 @@ the same is true twice over:
     MPI-style *origin-controlled* timing: start ≙ MPI_Put, wait ≙
     MPI_Win_flush.  Used by the fused overlap kernels.
 
+Since the deferred-substrate refactor (DESIGN.md §8) every function here is
+a thin wrapper over a **single-op `repro.core.plan.RmaPlan`**: record one
+descriptor, flush immediately.  Eager call sites keep their exact semantics
+and message counts, while multi-op call sites migrate to epoch-scoped plans
+(`plan.AccessEpoch`) and get op coalescing + model-guided backend dispatch
+for free.
+
 All functions here are pure and must be called inside ``shard_map`` (they use
 named-axis collectives).  Ranks are positions along one mesh axis.
 
@@ -42,6 +49,13 @@ def _axis_size(axis: str) -> int:
     return compat.axis_size(axis)
 
 
+def _plan(axis: str):
+    """One single-op plan (lazy import: plan.py imports OpCounter from here)."""
+    from repro.core import plan as plan_mod
+
+    return plan_mod.RmaPlan(axis)
+
+
 def rank(axis: str) -> Array:
     """This process's rank within the window axis."""
     return lax.axis_index(axis)
@@ -53,9 +67,10 @@ def put_shift(x: Array, shift: int, axis: str) -> Array:
 
     One ICI hop for |shift|=1 on a torus axis — the common halo/ring case.
     """
-    n = _axis_size(axis)
-    perm = [(i, (i + shift) % n) for i in range(n)]
-    return lax.ppermute(x, axis, perm)
+    p = _plan(axis)
+    h = p.put_shift(x, shift)
+    p.flush()
+    return h.result()
 
 
 def put_perm(x: Array, perm: Sequence[tuple[int, int]], axis: str) -> Array:
@@ -64,7 +79,10 @@ def put_perm(x: Array, perm: Sequence[tuple[int, int]], axis: str) -> Array:
     Ranks absent as destinations receive zeros (MPI: their window region is
     simply not written).
     """
-    return lax.ppermute(x, axis, list(perm))
+    p = _plan(axis)
+    h = p.put_perm(x, perm)
+    p.flush()
+    return h.result()
 
 
 # --------------------------------------------------------------------- get
@@ -75,7 +93,10 @@ def get_shift(x: Array, shift: int, axis: str) -> Array:
     both sides run the same program so the origin-passivity is preserved at
     the target (no compute on the target's side, only its DMA engine).
     """
-    return put_shift(x, -shift, axis)
+    p = _plan(axis)
+    h = p.get_shift(x, shift)
+    p.flush()
+    return h.result()
 
 
 def _get_index_impl(x: Array, src: Array | int, axis: str) -> Array:
@@ -85,12 +106,19 @@ def _get_index_impl(x: Array, src: Array | int, axis: str) -> Array:
 
 def get_index(x: Array, src: Array | int, axis: str) -> Array:
     """Get rank `src`'s shard — all ranks read one rank (broadcast get)."""
-    return _get_index_impl(x, src, axis)
+    p = _plan(axis)
+    h = p.all_gather(x, kind="gets")
+    p.flush()
+    full = h.result()
+    return jax.tree.map(lambda f: lax.dynamic_index_in_dim(f, src, 0, keepdims=False), full)
 
 
 def get_gather(x: Array, src_per_rank: Array, axis: str) -> Array:
     """Each rank gets the shard of rank ``src_per_rank[r]`` (gather-get)."""
-    full = lax.all_gather(x, axis)
+    p = _plan(axis)
+    h = p.all_gather(x, kind="gets")
+    p.flush()
+    full = h.result()
     me = lax.axis_index(axis)
     src = src_per_rank[me]
     return lax.dynamic_index_in_dim(full, src, 0, keepdims=False)
@@ -110,8 +138,10 @@ def accumulate_shift(
     contribution.  Element-wise atomicity holds because the slot is private
     to the origin and the reduction is applied by the owner (paper §2.4).
     """
-    incoming = put_shift(x, shift, axis)
-    return op(acc, incoming)
+    p = _plan(axis)
+    h = p.accumulate_shift(x, acc, shift, op)
+    p.flush()
+    return h.result()
 
 
 def accumulate_perm(
@@ -121,8 +151,10 @@ def accumulate_perm(
     axis: str,
     op: Callable[[Array, Array], Array] = jnp.add,
 ) -> Array:
-    incoming = put_perm(x, perm, axis)
-    return op(acc, incoming)
+    p = _plan(axis)
+    h = p.accumulate_perm(x, acc, perm, op)
+    p.flush()
+    return h.result()
 
 
 def accumulate_slots(
@@ -159,7 +191,13 @@ def put_all_to_all(x: Array, axis: str, tiled: bool = False) -> Array:
 
     `x` has leading dim p (one block destined per rank).
     """
-    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=tiled)
+    if tiled:  # plan a2a is untiled; tiled keeps the native lowering
+        OpCounter.record("colls")
+        return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+    p = _plan(axis)
+    h = p.put_all_to_all(x, kind="colls")
+    p.flush()
+    return h.result()
 
 
 def put_bcast(x: Array, root: int, axis: str) -> Array:
@@ -169,13 +207,23 @@ def put_bcast(x: Array, root: int, axis: str) -> Array:
     not a collective plus a get (the double count the instrumented `get_index`
     would record).
     """
+    OpCounter.record("colls")
     return _get_index_impl(x, root, axis)
 
 
 # ---------------------------------------------------------- instrumentation
 class OpCounter:
     """Counts one-sided ops issued while tracing — tests assert the paper's
-    O(k)/O(log p) message-complexity bounds against these counters."""
+    O(k)/O(log p) message-complexity bounds against these counters.
+
+    Since the deferred substrate (DESIGN.md §8) the counter distinguishes
+    **raw** messages (ops as recorded — what the program *meant*) from
+    **coalesced** messages (wire transfers actually issued after plan
+    aggregation).  Coalesced ops are attributed to their originating kind —
+    a fused transfer carrying 3 puts and 1 accumulate counts puts += 3,
+    accs += 1, raw_msgs += 4, coalesced_msgs += 1 — never as one `put`.
+    Per-plan aggregation detail accumulates in `.plans`.
+    """
 
     _active: list["OpCounter"] = []
 
@@ -184,6 +232,10 @@ class OpCounter:
         self.gets = 0
         self.accs = 0
         self.colls = 0
+        # deferred-substrate accounting (DESIGN.md §8)
+        self.raw_msgs = 0        # logical messages recorded
+        self.coalesced_msgs = 0  # wire transfers actually issued
+        self.plans: list[dict] = []  # per-plan aggregation stats
         # per-window-axis breakdown: {axis: {kind: count}}
         self.by_axis: dict = {}
 
@@ -194,32 +246,37 @@ class OpCounter:
     def __exit__(self, *exc) -> None:
         OpCounter._active.remove(self)
 
+    @property
+    def aggregation_factor(self) -> float:
+        return self.raw_msgs / self.coalesced_msgs if self.coalesced_msgs else 1.0
+
     @classmethod
     def record(cls, kind: str, n: int = 1, axis: str | None = None) -> None:
+        """Eager-path record: one logical op == one wire transfer."""
         for c in cls._active:
             setattr(c, kind, getattr(c, kind) + n)
+            c.raw_msgs += n
+            c.coalesced_msgs += n
             if axis is not None:
                 per = c.by_axis.setdefault(axis, {})
                 per[kind] = per.get(kind, 0) + n
 
-
-def _counted(kind: str):
-    def deco(fn):
-        @functools.wraps(fn)
-        def wrapper(*a, **k):
-            OpCounter.record(kind)
-            return fn(*a, **k)
-        return wrapper
-    return deco
-
-
-# wrap the public ops with instrumentation
-put_shift = _counted("puts")(put_shift)
-put_perm = _counted("puts")(put_perm)
-get_shift = _counted("gets")(get_shift)
-get_index = _counted("gets")(get_index)
-get_gather = _counted("gets")(get_gather)
-accumulate_shift = _counted("accs")(accumulate_shift)
-accumulate_perm = _counted("accs")(accumulate_perm)
-put_all_to_all = _counted("colls")(put_all_to_all)
-put_bcast = _counted("colls")(put_bcast)
+    @classmethod
+    def record_plan(
+        cls,
+        kinds: dict[tuple[str, str], int],
+        raw: int,
+        coalesced: int,
+        info: dict | None = None,
+    ) -> None:
+        """Plan-flush record: attribute each recorded op to its originating
+        kind (the raw count), and account wire transfers separately."""
+        for c in cls._active:
+            for (kind, axis), n in kinds.items():
+                setattr(c, kind, getattr(c, kind) + n)
+                per = c.by_axis.setdefault(axis, {})
+                per[kind] = per.get(kind, 0) + n
+            c.raw_msgs += raw
+            c.coalesced_msgs += coalesced
+            if info is not None:
+                c.plans.append(dict(info))

@@ -16,7 +16,7 @@ import json
 import os
 
 from repro.configs import SHAPES, get_config
-from repro.core.perfmodel import V5E, roofline_terms
+from repro.core.perfmodel import roofline_terms
 
 
 def model_flops_total(arch: str, shape_name: str) -> float:

@@ -5,7 +5,7 @@ plus `input_specs` (ShapeDtypeStruct stand-ins) for the multi-pod dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

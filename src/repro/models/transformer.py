@@ -16,7 +16,6 @@ is threaded through the scan as per-layer xs/ys.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -24,7 +23,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig
-from repro.parallel.sharding import shard
 
 from . import layers as L
 from . import mamba as M

@@ -19,13 +19,13 @@ Two levels, mirroring the paper's split between *protocols* (§2) and
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Literal
+from typing import Any, Literal, Optional
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
-from repro.core import collectives
+from repro.core import collectives, epoch as epoch_mod
+from repro.core import plan as plan_mod
+from repro.core.epoch import SyncStats
 from repro.core.perfmodel import DEFAULT_MODEL, PerfModel
 
 
@@ -61,6 +61,21 @@ class CollectiveStrategist:
         alltoall — the §6 rule over the DESIGN.md §6.5 queue model."""
         return self.model.select_dispatch(n_msgs, msg_bytes, p, capacity_per_pair)
 
+    # -- deferred-substrate dispatch (DESIGN.md §8) -----------------------
+    def aggregation_plan(self, n_msgs: int, msg_bytes: float
+                         ) -> Literal["pack", "direct"]:
+        """Plan-flush coalescing rule: pack same-signature ops into one
+        aggregated wire transfer vs issue them individually — the paper's
+        Fig. 5b message-rate crossover as a dispatch decision."""
+        return self.model.select_aggregation(n_msgs, msg_bytes)
+
+    def backend_plan(self, nbytes: float, shift_eligible: bool = True
+                     ) -> Literal["xla", "pallas", "interpret"]:
+        """Per-coalesced-group backend: XLA collective-permute vs the
+        `kernels/rma` explicit-DMA Pallas path (uniform-shift groups on TPU
+        past the model's payload threshold)."""
+        return plan_mod.choose_backend(self.model, nbytes, shift_eligible)
+
 
 # ----------------------------------------------------- gradient-sync overlap
 def bucket_grads(grads: Any, bucket_bytes: int = 32 * 2**20) -> list[list]:
@@ -85,13 +100,17 @@ def overlapped_grad_sync(
     outer_axis: str | None = "pod",
     bucket_bytes: int = 32 * 2**20,
     compress_outer: bool = False,
+    stats: Optional[SyncStats] = None,
 ) -> Any:
     """Reduce gradients with per-bucket epochs inside shard_map.
 
     Buckets are independent fence epochs, so XLA may interleave bucket k's
     ring steps with bucket k+1's local sums — the RMA analogue of NCCL
-    bucketed all-reduce with backward overlap.  When `compress_outer`, the
-    cross-pod hop applies error-feedback int8 (see parallel.compression).
+    bucketed all-reduce with backward overlap.  Every bucket boundary is an
+    `epoch.flush` (MPI_Win_flush), so the sync-message ledger sees one flush
+    per bucket (pass `stats` or an active `SyncStats` scope to collect
+    them).  When `compress_outer`, the cross-pod hop applies error-feedback
+    int8 (see parallel.compression).
     """
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     buckets = bucket_grads(grads, bucket_bytes)
@@ -103,8 +122,9 @@ def overlapped_grad_sync(
                 out[i] = collectives.hierarchical_all_reduce(g, inner_axis, outer_axis)
             else:
                 out[i] = collectives.all_reduce(g, inner_axis)
-        # bucket boundary: commit epoch before the next bucket is scheduled
-        pinned = lax.optimization_barrier(tuple(out[i] for i in bucket))
+        # bucket boundary: flush the epoch before the next bucket is
+        # scheduled (recorded in the sync ledger, unlike a bare barrier)
+        pinned = epoch_mod.flush(tuple(out[i] for i in bucket), stats=stats)
         for j, i in enumerate(bucket):
             out[i] = pinned[j]
     return jax.tree_util.tree_unflatten(treedef, out)

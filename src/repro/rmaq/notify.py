@@ -7,10 +7,11 @@ without ever receiving a two-sided message.  This is Taranov et al.'s
 write-with-notification and the RAMC channel doorbell, expressed over the
 paper's §2.4 ops:
 
-  * **XLA path (this module)** — the notification counter is a slotted
-    accumulate (one ppermute of per-origin counts + owner-side reduce); the
-    payload is the ordinary put.  Both ride the same fence epoch, so payload
-    visibility implies counter visibility (paper §2.3 ordering).
+  * **XLA path (this module)** — payload and doorbell are recorded into one
+    epoch-scoped `RmaPlan` (DESIGN.md §8) and flushed as a SINGLE fused
+    transfer: the notification counter literally rides the payload's wire
+    message, so payload visibility implies counter visibility by
+    construction (paper §2.3 ordering) — no second collective at all.
   * **Pallas path (`repro.kernels.rmaq`)** — the payload is an explicit
     remote DMA and the notification is a remote semaphore signal; the
     receiver's wait on the semaphore *is* the notification (a strict
@@ -27,8 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro import compat
-from repro.core import rma
+from repro.core import plan as plan_mod
 from repro.core.rma import OpCounter
 
 Array = jax.Array
@@ -41,19 +41,16 @@ def notified_put_shift(
     """Put `x` to rank (r+shift) mod p and bump the target's message counter.
 
     Returns (payload delivered into *us*, our counter incremented by the
-    number of messages that arrived).  One payload put + one counter
-    accumulate — the per-message cost the perf model's `p_notified_put`
-    charges.
+    number of messages that arrived).  The doorbell is the accumulate half
+    of the notified put and shares the payload's fused wire transfer; the
+    pair is charged as one put + one accumulate — the per-message cost the
+    perf model's `p_notified_put` charges.
     """
-    delivered = rma.put_shift(x, shift, axis)
-    # counter transfer is the *accumulate* half of the notified put — move it
-    # with a raw ppermute so it is not double-counted as a second put (same
-    # reason put_bcast calls the unwrapped get implementation)
-    p = compat.axis_size(axis)
-    perm = [(i, (i + shift) % p) for i in range(p)]
-    arrived = lax.ppermute(jnp.uint32(1), axis, perm)
-    OpCounter.record("accs", axis=axis)
-    return delivered, counter + arrived
+    pl = plan_mod.RmaPlan(axis)
+    h_pay = pl.put_shift(x, shift, kind="puts")
+    h_bell = pl.put_shift(jnp.uint32(1), shift, kind="accs")  # doorbell rider
+    pl.flush(aggregate=True)
+    return h_pay.result(), counter + h_bell.result()
 
 
 def notified_put_perm(
@@ -64,10 +61,11 @@ def notified_put_perm(
     Ranks that are not a destination in `perm` observe zero payload and an
     unchanged counter (their notification count simply does not move).
     """
-    delivered = rma.put_perm(x, perm, axis)
-    arrived = lax.ppermute(jnp.uint32(1), axis, list(perm))  # accumulate half
-    OpCounter.record("accs", axis=axis)
-    return delivered, counter + arrived
+    pl = plan_mod.RmaPlan(axis)
+    h_pay = pl.put_perm(x, perm, kind="puts")
+    h_bell = pl.put_perm(jnp.uint32(1), perm, kind="accs")  # doorbell rider
+    pl.flush(aggregate=True)
+    return h_pay.result(), counter + h_bell.result()
 
 
 def accumulate_counts(send_counts: Array, axis: str) -> Array:
@@ -78,8 +76,10 @@ def accumulate_counts(send_counts: Array, axis: str) -> Array:
     This is MPI_Accumulate on an int window via the slotted protocol (§2.4):
     one ragged all-to-all of counters, owner-side visibility.
     """
-    OpCounter.record("accs", axis=axis)
-    return lax.all_to_all(send_counts, axis, split_axis=0, concat_axis=0)
+    pl = plan_mod.RmaPlan(axis)
+    h = pl.put_all_to_all(send_counts, kind="accs")
+    pl.flush()
+    return h.result()
 
 
 def fetch_and_add_ordered(x: Array, axis: str) -> tuple[Array, Array]:
@@ -93,11 +93,13 @@ def fetch_and_add_ordered(x: Array, axis: str) -> tuple[Array, Array]:
     origins were serviced in rank order, computed bufferlessly from one
     counter gather.
     """
-    all_x = lax.all_gather(x, axis)                  # counter window read
+    pl = plan_mod.RmaPlan(axis)
+    h = pl.all_gather(x, kind="gets")                # counter window read
+    pl.flush()
+    all_x = h.result()
     me = lax.axis_index(axis)
     prefix = jnp.cumsum(all_x, axis=0) - all_x       # exclusive prefix
     OpCounter.record("accs", axis=axis)
-    OpCounter.record("gets", axis=axis)
     return prefix[me], jnp.sum(all_x, axis=0)
 
 

@@ -24,6 +24,11 @@ design of Taranov et al., built from the paper's §2.4 ops):
      (`seq & (capacity-1)`, wraparound by power-of-two mask) as one-sided
      puts in a single epoch, and each target's notification counter is
      accumulated by the same epoch (`notify` column of the counter block).
+     Since the deferred substrate (DESIGN.md §8) both protocol rounds are
+     recorded into epoch-scoped `RmaPlan`s: the reservation is ONE fused
+     counter gather and payload+sequence+notification are ONE fused
+     aggregated transfer — a queue append is a single wire message, not
+     three collectives.
 
 Dequeue is owner-local: read `[head, min(tail, head+n))`, advance `head`.
 No lock anywhere — head is consumer-private, tail moves only through the
@@ -46,8 +51,8 @@ from jax import lax
 from repro import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import plan as plan_mod
 from repro.core import window as window_mod
-from repro.core.rma import OpCounter
 
 Array = jax.Array
 
@@ -194,13 +199,17 @@ def enqueue(
     onehot = jax.nn.one_hot(dest_safe, p, dtype=jnp.int32)
     counts = (onehot * valid[:, None].astype(jnp.int32)).sum(axis=0)  # [p]
 
-    # ---- 1. reserve: rank-ordered fetch-and-add on every target's tail
-    C = lax.all_gather(counts, axis)                   # [p, p] producer x target
-    ctrs_all = lax.all_gather(state.ctrs, axis)        # [p, 5] counter window read
+    # ---- 1. reserve: rank-ordered fetch-and-add on every target's tail.
+    # The count fetch and the counter-window read ride ONE fused gather
+    # (an epoch-scoped plan, DESIGN.md §8) instead of two.
+    rplan = plan_mod.RmaPlan(axis)
+    h_C = rplan.all_gather(counts, kind="gets")        # counter window fetch
+    h_ctrs = rplan.all_gather(state.ctrs, kind="accs")  # the fetch-and-add round
+    rplan.flush(aggregate=True)
+    C = h_C.result()                                   # [p, p] producer x target
+    ctrs_all = h_ctrs.result()                         # [p, 5] counter window read
     tails = ctrs_all[:, TAIL]
     used = (tails - ctrs_all[:, HEAD]).astype(jnp.int32)
-    OpCounter.record("gets", axis=axis)                # counter window fetch
-    OpCounter.record("accs", axis=axis)                # the fetch-and-add round
 
     # ---- 2. admit up to free space, producers served in rank order
     grant, offset = admission_plan(C, used, cap)       # [p, p] each
@@ -220,11 +229,17 @@ def enqueue(
     send_seq = jnp.zeros((p * k,), jnp.uint32).at[put_idx].set(seq, mode="drop")
     send_val = jnp.zeros((p * k,), jnp.bool_).at[put_idx].set(accepted, mode="drop")
 
-    recv_buf = lax.all_to_all(send_buf.reshape(p, k, -1), axis, 0, 0)
-    recv_seq = lax.all_to_all(send_seq.reshape(p, k), axis, 0, 0)
-    recv_val = lax.all_to_all(send_val.reshape(p, k), axis, 0, 0)
-    OpCounter.record("puts", axis=axis)                # payload puts (one epoch)
-    OpCounter.record("accs", axis=axis)                # notification accumulate
+    # payload + sequence numbers + notification flags are ONE fused wire
+    # transfer (the write-with-notification property, now literal): a queue
+    # append is a single aggregated put instead of three collectives.
+    pplan = plan_mod.RmaPlan(axis)
+    h_buf = pplan.put_all_to_all(send_buf.reshape(p, k, -1), kind="puts")
+    h_seq = pplan.put_all_to_all(send_seq.reshape(p, k), kind=None)  # rider
+    h_val = pplan.put_all_to_all(send_val.reshape(p, k), kind="accs")  # notify
+    pplan.flush(aggregate=True)
+    recv_buf = h_buf.result()
+    recv_seq = h_seq.result()
+    recv_val = h_val.result()
 
     # ---- owner side: scatter into disjoint ring slots, publish tail
     in_val = recv_val.reshape(p * k)

@@ -82,6 +82,11 @@ class DisaggEngine:
             lanes=[rch.Lane("kv", (cfg.block_tokens, 2, cfg.d_model), jnp.float32)],
         )
         self._step = self._build_step()
+        # trace-time message accounting: the KV shipping rides the queue's
+        # epoch-scoped plans (DESIGN.md §8), so one abstract trace tells us
+        # exactly how many raw ops coalesce into how many wire transfers
+        # per engine step — the serving-side aggregation factor
+        self.msg_stats = self._trace_message_stats()
 
         # host-side request tracking
         self._pending: list[tuple[int, np.ndarray]] = []   # (req_id, tokens)
@@ -146,6 +151,28 @@ class DisaggEngine:
                 check_vma=False,
             )
         )
+
+    def _trace_message_stats(self) -> dict:
+        """Abstractly trace one engine step under an `OpCounter` and report
+        the raw vs coalesced (wire) message counts of the KV-shipping path."""
+        from repro.core.rma import OpCounter
+
+        like = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            (self.params, self.qstate),
+        )
+        tokens = jax.ShapeDtypeStruct((self.p, self.cfg.block_tokens), jnp.int32)
+        req_id = jax.ShapeDtypeStruct((self.p,), jnp.int32)
+        with OpCounter() as c:
+            self._step.lower(like[0], like[1], tokens, req_id)
+        return {
+            "raw_msgs_per_step": c.raw_msgs,
+            "wire_msgs_per_step": c.coalesced_msgs,
+            "aggregation_factor": c.aggregation_factor,
+            "puts": c.puts,
+            "gets": c.gets,
+            "accs": c.accs,
+        }
 
     # ------------------------------------------------------------ host side
     def submit(self, req_id: int, tokens) -> None:

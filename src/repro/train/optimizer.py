@@ -10,8 +10,7 @@ so it can pick RMA-hierarchical vs native all-reduce and apply compression.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ param/optimizer shardings attached to the input ShapeDtypeStructs (launcher).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

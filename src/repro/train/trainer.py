@@ -19,13 +19,12 @@ import dataclasses
 import time
 from typing import Callable, Optional
 
-import jax
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.pipeline import SyntheticTokenPipeline
 from repro.ft.heartbeat import HeartbeatMonitor
 
-from .optimizer import AdamWConfig, OptState, init_opt_state
+from .optimizer import OptState, init_opt_state
 
 
 @dataclasses.dataclass

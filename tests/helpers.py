@@ -7,7 +7,6 @@ XLA_FLAGS=--xla_force_host_platform_device_count=N set before jax imports.
 
 from __future__ import annotations
 
-import functools
 import os
 import random
 import subprocess
@@ -40,8 +39,8 @@ def run_subtest(name: str, devices: int = 8, timeout: int = 900, args: list[str]
 # `given/settings/st` from here rather than from hypothesis directly.
 # --------------------------------------------------------------------------
 try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
+    from hypothesis import given, settings  # noqa: F401  (re-exported)
+    from hypothesis import strategies as st  # noqa: F401  (re-exported)
 
     HAVE_HYPOTHESIS = True
 except ImportError:

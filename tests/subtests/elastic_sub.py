@@ -1,5 +1,4 @@
 """Multi-device: checkpoint saved on one mesh restores on a smaller mesh."""
-import sys
 import tempfile
 
 import jax

@@ -1,6 +1,4 @@
 """Multi-device: distributed hashtable insert/lookup vs a python dict."""
-import functools
-import sys
 
 import jax
 import jax.numpy as jnp

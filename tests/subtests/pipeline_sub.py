@@ -1,10 +1,8 @@
 """Multi-device: GPipe pipeline forward == sequential stage application."""
 import functools
-import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 

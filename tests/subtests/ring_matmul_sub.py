@@ -1,5 +1,4 @@
 """Multi-device: fused ring matmul (RDMA overlap) vs unfused oracle."""
-import sys
 import jax, jax.numpy as jnp
 from repro.kernels.ring_matmul.ops import ring_matmul
 

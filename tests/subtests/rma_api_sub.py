@@ -8,7 +8,7 @@ import numpy as np
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import collectives, rma
+from repro.core import rma
 from repro.core.epoch import FenceEpoch, PSCWEpoch, SharedLockEpoch, flush
 
 N = len(jax.devices())

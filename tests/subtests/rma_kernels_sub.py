@@ -1,8 +1,6 @@
 """Multi-device: RMA Pallas kernels (interpret mode) vs lax refs."""
-import sys
 import functools
 import jax, jax.numpy as jnp
-import numpy as np
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.kernels.rma import ops, ref

@@ -10,7 +10,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.rma import OpCounter
 from repro.kernels.rmaq import ops as kops, ref as kref
-from repro.rmaq import channel as rch, notify, queue as rq
+from repro.rmaq import channel as rch, queue as rq
 
 N = len(jax.devices())
 mesh = jax.make_mesh((N,), ("x",))

@@ -5,7 +5,6 @@ lock-protocol safety under real concurrency, O(1) AMO costs, and the
 model-guided selection rules of §6.
 """
 
-import math
 import threading
 
 import jax
@@ -15,7 +14,7 @@ import pytest
 from .helpers import given, settings, st
 
 from repro.core import locks_sim, window
-from repro.core.perfmodel import DEFAULT_MODEL, V5E, PerfModel, roofline_terms
+from repro.core.perfmodel import DEFAULT_MODEL, V5E, roofline_terms
 
 
 # ------------------------------------------------------------------ windows
@@ -55,6 +54,60 @@ class TestWindows:
         win = window.win_create_dynamic(self._mesh(), "w")
         with pytest.raises(window.WindowError):
             win.detach(7)
+
+    def test_dynamic_attach_invalidates_remote_caches(self):
+        """§2.2: every attach/detach bumps attach_id; a cached descriptor
+        list is refetched (1 id check + full region list) exactly once per
+        invalidation, then lookups are O(1) again."""
+        mesh = self._mesh()
+        win = window.win_create_dynamic(mesh, "w")
+        r1 = win.attach("kv", (8,), jnp.float32)
+        r2 = win.attach("grads", (4, 4), jnp.float32)
+        cache = window.DescriptorCache()
+
+        cache.lookup(win, r1)
+        cold = cache.remote_ops                   # id check + 2-region fetch
+        assert cold == 1 + 2
+        cache.lookup(win, r2)
+        assert cache.remote_ops == cold + 1       # warm: id check only
+
+        r3 = win.attach("acts", (2,), jnp.int32)  # invalidates the cache
+        cache.lookup(win, r3)
+        assert cache.remote_ops == cold + 1 + (1 + 3)  # refetch all 3 regions
+        warm = cache.remote_ops
+        cache.lookup(win, r1)
+        assert cache.remote_ops == warm + 1       # warm again
+
+        win.detach(r2)                            # invalidates again
+        cache.lookup(win, r1)
+        assert cache.remote_ops == warm + 1 + (1 + 2)
+        with pytest.raises(window.WindowError):
+            cache.lookup(win, r2)                 # detached region is gone
+
+    def test_dynamic_attach_id_monotone_and_metadata_o1_per_region(self):
+        win = window.win_create_dynamic(self._mesh(), "w")
+        base_meta = win.metadata_nbytes()
+        ids = []
+        for i in range(4):
+            win.attach(f"r{i}", (2,), jnp.float32)
+            ids.append(win.attach_id)
+        assert ids == sorted(ids) and len(set(ids)) == 4
+        # O(1) metadata per attached region (§2.2 linked-list node)
+        assert win.metadata_nbytes() == base_meta + 4 * 48
+
+    def test_stale_cache_refetch_cost_independent_of_lookups(self):
+        """O(1)-amortized: n warm lookups cost n, regardless of how many
+        invalidations happened before the cache went warm."""
+        win = window.win_create_dynamic(self._mesh(), "w")
+        rid = win.attach("a", (2,), jnp.float32)
+        cache = window.DescriptorCache()
+        for _ in range(3):
+            win.attach_id += 1                    # remote attach elsewhere
+            cache.lookup(win, rid)
+        warm = cache.remote_ops
+        for _ in range(10):
+            cache.lookup(win, rid)
+        assert cache.remote_ops == warm + 10
 
     def test_shared_window_same_layout_as_allocated(self):
         mesh = self._mesh()

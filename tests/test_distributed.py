@@ -25,3 +25,7 @@ def test_overlapped_grad_sync_and_compression():
 
 def test_rma_api_surface():
     run_subtest("rma_api_sub.py", devices=8)
+
+
+def test_deferred_plan_substrate():
+    run_subtest("plan_sub.py", devices=8)

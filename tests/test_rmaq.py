@@ -8,7 +8,7 @@ import pytest
 from repro.core.perfmodel import DEFAULT_MODEL
 from repro.parallel.overlap import CollectiveStrategist
 from repro.rmaq.channel import ChannelError, HostChannel, Lane
-from repro.rmaq.queue import DROP, HostQueueGroup, QueueError, admission_plan
+from repro.rmaq.queue import HostQueueGroup, QueueError, admission_plan
 
 from .helpers import given, run_subtest, settings, st
 
