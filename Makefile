@@ -15,7 +15,9 @@ bench:
 	$(PYTHON) benchmarks/run.py
 
 # fast subset: message-rate bench + BENCH_rma_plan.json (eager vs coalesced
-# counts + modeled latency) — seeds the perf trajectory without the full run
+# counts + modeled latency) + BENCH_serve_flow.json (reject/retry vs
+# credit-based enqueue counts, DESIGN.md §9) — seeds the perf trajectory
+# without the full run
 bench-smoke:
 	$(PYTHON) benchmarks/run.py --smoke
 

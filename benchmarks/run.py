@@ -5,9 +5,11 @@ process keeps 1 CPU device).  Output: ``name,us_per_call,derived`` CSV.
 
 The harness also emits ``BENCH_rma_plan.json`` — eager vs coalesced message
 counts (traced through `OpCounter`) plus the §8 model's latency for both
-paths and the aggregation crossover — seeding the perf trajectory for the
-deferred substrate.  ``--smoke`` runs just that emission plus the
-message-rate bench (the `make bench-smoke` target).
+paths and the aggregation crossover — and ``BENCH_serve_flow.json`` —
+reject/retry vs credit-based enqueue counts and modeled/measured message
+rates for the serving path (§9, written by `bench_serve_flow`).  ``--smoke``
+runs those emissions plus the message-rate bench (the `make bench-smoke`
+target).
 """
 
 from __future__ import annotations
@@ -27,6 +29,7 @@ BENCHES = [
     ("benchmarks.bench_hashtable", 8, "Fig 7a hashtable"),
     ("benchmarks.bench_dsde", 8, "Fig 7b DSDE"),
     ("benchmarks.bench_rmaq", 8, "rmaq queues (DESIGN.md §6.8)"),
+    ("benchmarks.bench_serve_flow", 8, "serve flow control (DESIGN.md §9)"),
     ("benchmarks.bench_fft", 8, "Fig 7c 3D FFT"),
     ("benchmarks.bench_milc", 8, "Fig 8 MILC stencil"),
     ("benchmarks.bench_roofline", 1, "roofline from dry-run"),
@@ -34,6 +37,8 @@ BENCHES = [
 
 SMOKE_BENCHES = [
     ("benchmarks.bench_message_rate", 4, "Fig 5b-c message rate (smoke)"),
+    ("benchmarks.bench_serve_flow", 4, "serve flow control (smoke, "
+                                       "emits BENCH_serve_flow.json)"),
 ]
 
 

@@ -24,10 +24,11 @@ def main() -> None:
     mesh = jax.make_mesh((n,), ("serve",))
     cfg = DisaggConfig(
         n_prefill=max(1, n // 2), block_tokens=16, d_model=32,
-        queue_capacity=16, max_recv_per_step=4,
+        queue_capacity=16, max_recv_per_step=4, n_lanes=2, flow=True,
     )
     engine = DisaggEngine(mesh, "serve", cfg, seed=0)
     print(f"mesh: {cfg.n_prefill} prefill + {n - cfg.n_prefill} decode ranks; "
+          f"{cfg.n_lanes} credit lanes/rank; "
           f"KV block = [{cfg.block_tokens}, 2, {cfg.d_model}] f32 per request")
 
     rng = np.random.RandomState(7)
@@ -48,10 +49,17 @@ def main() -> None:
     shipped = int(stats["enqueued"].sum())
     print(f"served {len(results)} requests in {dt*1e3:.1f} ms "
           f"({len(results)/dt:.0f} req/s)")
+    fstats = engine.flow_stats()
     print(f"KV blocks shipped over the channel: {shipped} "
           f"({shipped * kv_bytes / 1024:.0f} KiB), "
           f"notifications: {int(stats['notifications'].sum())}, "
-          f"send retries (backpressure): {engine.retries}")
+          f"send retries (backpressure): {engine.retries}, "
+          f"credit stalls: {engine.credit_stalls}")
+    if fstats:
+        cons = "OK" if fstats["conservation_ok"] else "BROKEN"
+        print(f"lane sends per decode rank: "
+              f"{fstats['lane_sends'][cfg.n_prefill:].tolist()}, "
+              f"credit conservation: {cons}")
     print(f"decode == single-host reference: {ok}/{n_requests}")
     for rid in sorted(results)[:4]:
         print(f"  req {rid}: token {results[rid]}")

@@ -232,6 +232,71 @@ class PerfModel:
         p_message_rate already takes the max of those two regimes."""
         return 1.0 / self.p_message_rate(nbytes)
 
+    # -- flow control: credit vs reject/retry (DESIGN.md §9) ---------------
+    def p_credit_refresh(self, fused: bool = True, hops: int = 1) -> float:
+        """Marginal cost of refreshing the sender's credit limit.
+
+        On the hot path the refresh is a rider on the enqueue epoch's fused
+        reservation gather (`queue.enqueue_epoch`) — zero marginal wire
+        transfers, zero marginal latency.  An idle sender pays a standalone
+        get of the published credit word (`notify.fetch_credits`).
+        """
+        return 0.0 if fused else self.p_get(4.0, hops)
+
+    def expected_rejects(self, occupancy: float) -> float:
+        """Expected reject/retry rounds per accepted enqueue when the ring
+        runs at occupancy fraction f: an arrival finds free space with
+        probability (1 - f), so acceptance is geometric — f/(1-f) wasted
+        attempts on average (unbounded as the ring saturates)."""
+        f = min(max(occupancy, 0.0), 0.999999)
+        return f / (1.0 - f)
+
+    def p_enqueue_retry(self, nbytes: float, occupancy: float,
+                        hops: int = 1) -> float:
+        """§6.2 reject/retry enqueue at steady-state ring occupancy: the
+        accept path plus, per expected rejection, a wasted reservation round
+        (the rejected message still paid the counter gather) and the
+        doorbell-grade latency of learning about the rejection before the
+        host can replay the send."""
+        retry = self.p_queue_reserve(hops) + self.notification_latency(hops)
+        return (self.p_queue_enqueue(nbytes, hops)
+                + self.expected_rejects(occupancy) * retry)
+
+    def p_enqueue_credit(self, nbytes: float, credit_batch: int,
+                         fused: bool = True, hops: int = 1) -> float:
+        """Credit-controlled enqueue: the common path is wire-identical to
+        the accept path of the retry scheme (same 2 fused transfers), plus
+        the refresh amortized over one credit batch (`capacity / (p·L)`
+        messages between cache-dry events when the consumer keeps up).
+        There is no reject term at any occupancy — an uncredited message is
+        deferred at the origin for free."""
+        return (self.p_queue_enqueue(nbytes, hops)
+                + self.p_credit_refresh(fused, hops) / max(credit_batch, 1))
+
+    def select_flow_control(
+        self, nbytes: float, occupancy: float, credit_batch: int,
+        fused: bool = True,
+    ) -> Literal["credit", "retry"]:
+        """§6-style dispatch rule for the serving path: below the crossover
+        occupancy the ring almost never rejects and the (standalone-refresh)
+        credit overhead is not yet amortized; past it every reject/retry
+        round costs a full reservation and credits win.  With the fused
+        refresh (the rmaq hot path) credit is never worse."""
+        credit = self.p_enqueue_credit(nbytes, credit_batch, fused)
+        retry = self.p_enqueue_retry(nbytes, occupancy)
+        return "credit" if credit <= retry else "retry"
+
+    def flow_crossover_occupancy(self, nbytes: float, credit_batch: int,
+                                 fused: bool = False) -> float:
+        """Smallest ring-occupancy fraction (linear scan, 1% grid) where the
+        credit scheme beats reject/retry — the modeled crossover the serve
+        benchmark validates.  0.0 when credit always wins (fused refresh)."""
+        for i in range(100):
+            f = i / 100.0
+            if self.select_flow_control(nbytes, f, credit_batch, fused) == "credit":
+                return f
+        return 1.0
+
     # -- model-guided strategy selection (paper §6 example) ----------------
     def select_dispatch(
         self,

@@ -150,6 +150,7 @@ class PlanStats:
     groups: int = 0          # distinct collective signatures
     packed_groups: int = 0   # groups fused into one transfer
     bytes_logical: int = 0   # payload bytes as recorded
+    bytes_wire: int = 0      # origin-injected bytes actually on the wire
     backends: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -294,13 +295,14 @@ class RmaPlan:
 
     # -------------------------------------------------------------- issuing
     def _issue_group(self, sig: tuple, ops: list[_RecordedOp], pack: bool,
-                     backend: Backend) -> int:
-        """Issue one signature group; returns number of wire transfers."""
+                     backend: Backend) -> tuple[int, int]:
+        """Issue one signature group; returns (wire transfers, wire bytes —
+        origin-injected, i.e. what this rank puts on its links)."""
         axis = self.axis
         if sig[0] == "local":
             for op in ops:
                 op.handle._result = op.finalize(op.payload)
-            return len(ops)
+            return len(ops), 0
 
         if not pack or len(ops) == 1:
             for op in ops:
@@ -313,7 +315,7 @@ class RmaPlan:
                 else:  # all_gather
                     moved = lax.all_gather(op.payload, axis)
                 op.handle._result = op.finalize(moved)
-            return len(ops)
+            return len(ops), sum(op.nbytes for op in ops)
 
         # -- fused: encode each payload to uint32 words, move once, decode
         lead = 1 if sig[0] == "all_to_all" else 0
@@ -344,7 +346,7 @@ class RmaPlan:
                               op.payload.dtype)
             op.handle._result = op.finalize(out)
             off += w
-        return 1
+        return 1, int(packed.size) * 4
 
     def flush(self, aggregate: Optional[bool] = None,
               backend: str = "auto") -> PlanStats:
@@ -395,9 +397,10 @@ class RmaPlan:
                 )
                 be = self._backend(group_bytes, shift_ok)
 
-            wire = self._issue_group(sig, ops, pack, be)
+            wire, wire_bytes = self._issue_group(sig, ops, pack, be)
             stats.raw += n
             stats.coalesced += wire
+            stats.bytes_wire += wire_bytes
             if pack and wire == 1 and n > 1:
                 stats.packed_groups += 1
             stats.backends[be] = stats.backends.get(be, 0) + wire
@@ -414,6 +417,7 @@ class RmaPlan:
                 "groups": stats.groups,
                 "packed_groups": stats.packed_groups,
                 "bytes_logical": stats.bytes_logical,
+                "bytes_wire": stats.bytes_wire,
             },
         )
         self.stats = stats

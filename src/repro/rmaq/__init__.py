@@ -13,8 +13,12 @@ ring-buffer write-with-notification queues).  See DESIGN.md §6.
     rank-ordered fetch-and-add slot reservation, wraparound, backpressure
     and drain; O(1) metadata (the `win_allocate` property is preserved).
   * `channel` — typed multi-lane channels multiplexed over one queue.
+  * `flow`    — credit-based flow control over the channel lanes: published
+    per-(producer, lane) grant counters, local credit caches, refresh riding
+    the reservation gather — deferral at the origin instead of reject/retry
+    (DESIGN.md §9).
 """
 
-from . import channel, notify, queue  # noqa: F401
+from . import channel, flow, notify, queue  # noqa: F401
 
-__all__ = ["channel", "notify", "queue"]
+__all__ = ["channel", "flow", "notify", "queue"]

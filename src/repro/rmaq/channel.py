@@ -107,7 +107,36 @@ class Channel:
         )
         return jnp.concatenate([lax.bitcast_convert_type(hdr_i, jnp.float32), flat], axis=1)
 
+    def homogeneous(self) -> bool:
+        """Whether every lane shares one payload shape + dtype — the
+        precondition for runtime (data-dependent) lane selection."""
+        return len({(l.shape, jnp.dtype(l.dtype)) for l in self.lanes}) == 1
+
     # ------------------------------------------------- send/recv (SPMD path)
+    def packed(
+        self, name: str, payload: Array, tag: Array, lane_id: Array | None = None
+    ) -> Array:
+        """Pack + stamp this rank as the source (must run inside shard_map).
+
+        `lane_id` ([k] int32) overrides the static lane id per message —
+        runtime lane selection for credit-aware multi-lane senders (`flow`).
+        Only legal when the lane table is homogeneous, since the payload was
+        typed/padded against lane `name`.
+        """
+        msgs = self.pack(name, payload, tag)
+        me = lax.axis_index(self.desc.axis).astype(jnp.int32)
+        hdr = lax.bitcast_convert_type(msgs[:, :HDR], jnp.int32)
+        hdr = hdr.at[:, 1].set(me)
+        if lane_id is not None:
+            if not self.homogeneous():
+                raise ChannelError(
+                    "runtime lane selection needs a homogeneous lane table"
+                )
+            hdr = hdr.at[:, 0].set(lane_id.astype(jnp.int32))
+        return jnp.concatenate(
+            [lax.bitcast_convert_type(hdr, jnp.float32), msgs[:, HDR:]], axis=1
+        )
+
     def send(
         self,
         state: rq.QueueState,
@@ -118,14 +147,7 @@ class Channel:
     ) -> tuple[rq.QueueState, rq.EnqueueReceipt]:
         """Collective: enqueue `payload[i]` on lane `name` at rank dest[i]
         (-1 = skip).  Must run inside shard_map on the channel axis."""
-        msgs = self.pack(name, payload, tag)
-        me = lax.axis_index(self.desc.axis).astype(jnp.int32)
-        hdr = lax.bitcast_convert_type(msgs[:, :HDR], jnp.int32)
-        hdr = hdr.at[:, 1].set(me)
-        msgs = jnp.concatenate(
-            [lax.bitcast_convert_type(hdr, jnp.float32), msgs[:, HDR:]], axis=1
-        )
-        return rq.enqueue(self.desc, state, msgs, dest)
+        return rq.enqueue(self.desc, state, self.packed(name, payload, tag), dest)
 
     def recv(
         self, state: rq.QueueState, max_n: int
@@ -141,20 +163,34 @@ class Channel:
             valid=valid,
         )
 
+    def _decode_rows(self, batch: RecvBatch, lane: Lane,
+                     mask: Array) -> tuple[Array, Array]:
+        """Decode `batch` rows as `lane`-typed payloads, zeroing ~mask."""
+        w = _lane_width(lane)
+        flat = batch.words[:, :w]
+        if jnp.dtype(lane.dtype) != jnp.dtype(jnp.float32):
+            flat = lax.bitcast_convert_type(flat, lane.dtype)
+        flat = jnp.where(mask[:, None], flat, jnp.zeros_like(flat))
+        return flat.reshape((batch.words.shape[0],) + lane.shape), mask
+
     def payload(self, batch: RecvBatch, name: str) -> tuple[Array, Array]:
         """Decode lane `name`'s messages from a RecvBatch.
 
         Returns (typed [n, *lane.shape] payloads, [n] bool mask of which rows
         belong to this lane).  Other lanes' rows are zeroed.
         """
-        lane = self.lane(name)
-        w = _lane_width(lane)
         mask = batch.valid & (batch.lane_id == self.lane_id(name))
-        flat = batch.words[:, :w]
-        if jnp.dtype(lane.dtype) != jnp.dtype(jnp.float32):
-            flat = lax.bitcast_convert_type(flat, lane.dtype)
-        flat = jnp.where(mask[:, None], flat, jnp.zeros_like(flat))
-        return flat.reshape((batch.words.shape[0],) + lane.shape), mask
+        return self._decode_rows(batch, self.lane(name), mask)
+
+    def payload_all(self, batch: RecvBatch) -> tuple[Array, Array]:
+        """Decode every valid row regardless of lane — the multi-lane drain
+        for engines where lanes are scheduling channels (credit domains),
+        not types.  Requires a homogeneous lane table."""
+        if not self.homogeneous():
+            raise ChannelError("payload_all needs a homogeneous lane table")
+        mask = (batch.valid & (batch.lane_id >= 0)
+                & (batch.lane_id < len(self.lanes)))
+        return self._decode_rows(batch, self.lanes[0], mask)
 
 
 def channel_allocate(

@@ -103,6 +103,24 @@ def fetch_and_add_ordered(x: Array, axis: str) -> tuple[Array, Array]:
     return prefix[me], jnp.sum(all_x, axis=0)
 
 
+def fetch_credits(published: Array, axis: str) -> Array:
+    """One-sided read of every rank's *published* credit block (DESIGN.md
+    §9): rank t keeps its cumulative per-(producer, lane) grant counters in
+    the queue window next to `ctrs`; a sender whose local credit cache runs
+    dry refreshes by getting them — returns [p, *published.shape].
+
+    This is the *standalone* refresh (an idle sender with no enqueue to
+    ride).  On the hot path the refresh is instead recorded as a rider on
+    the enqueue epoch's reservation plan (`queue.enqueue_epoch`'s
+    `reserve_riders`), where it shares the fused counter gather and costs
+    zero marginal wire transfers — `PerfModel.p_credit_refresh(fused=True)`.
+    """
+    pl = plan_mod.RmaPlan(axis)
+    h = pl.all_gather(published, kind="gets")
+    pl.flush()
+    return h.result()
+
+
 def wait_notifications(tree, counter: Array, expected) -> tuple:
     """Epoch-close for the notified-access pattern: pin `tree` (the payload
     buffers) at this program point so no RMA op can be hoisted past the

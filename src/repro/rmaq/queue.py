@@ -161,11 +161,12 @@ def admission_plan(C, used, capacity: int, xp=jnp):
     return grant, offset
 
 
-def _fifo_pos(dest: Array, valid: Array, p: int) -> Array:
-    """Program-order index of each message within its (producer→target)
-    group — the per-message fetch-and-add result."""
-    k = dest.shape[0]
-    key = jnp.where(valid, dest, p)                    # invalid sort last
+def _fifo_pos(key: Array, valid: Array, n_keys: int) -> Array:
+    """Program-order index of each message within its group (`key` in
+    [0, n_keys), e.g. the target rank — or target*L+lane for per-lane credit
+    accounting in `flow`) — the per-message fetch-and-add result."""
+    k = key.shape[0]
+    key = jnp.where(valid, key, n_keys)                # invalid sort last
     order = jnp.argsort(key, stable=True)
     s_key = key[order]
     pos_sorted = (
@@ -176,15 +177,24 @@ def _fifo_pos(dest: Array, valid: Array, p: int) -> Array:
 
 
 # ------------------------------------------------------------------- enqueue
-def enqueue(
-    desc: QueueDescriptor, state: QueueState, msgs: Array, dest: Array
-) -> tuple[QueueState, EnqueueReceipt]:
+def enqueue_epoch(
+    desc: QueueDescriptor,
+    state: QueueState,
+    msgs: Array,
+    dest: Array,
+    reserve_riders: tuple = (),
+) -> tuple[QueueState, EnqueueReceipt, tuple]:
     """Collective enqueue epoch (all ranks participate; inside shard_map).
 
     msgs: [k, *item_shape] payloads; dest: [k] int32 target ranks, -1 = no
     message in that slot.  Returns the updated state and a receipt; rejected
     messages (receipt.accepted == False) stay with the caller — retry after
     the consumer drains (backpressure, never overwrite).
+
+    `reserve_riders` are extra per-rank arrays all-gathered on the
+    reservation plan — they ride the SAME fused wire transfer as the counter
+    fetch (zero marginal messages) and come back as the third return value
+    ([p, *rider.shape] each).  `flow` uses this for credit-limit refreshes.
     """
     axis, cap = desc.axis, desc.capacity
     p = compat.axis_size(axis)
@@ -205,9 +215,11 @@ def enqueue(
     rplan = plan_mod.RmaPlan(axis)
     h_C = rplan.all_gather(counts, kind="gets")        # counter window fetch
     h_ctrs = rplan.all_gather(state.ctrs, kind="accs")  # the fetch-and-add round
+    h_riders = [rplan.all_gather(r, kind=None) for r in reserve_riders]
     rplan.flush(aggregate=True)
     C = h_C.result()                                   # [p, p] producer x target
     ctrs_all = h_ctrs.result()                         # [p, 5] counter window read
+    rider_out = tuple(h.result() for h in h_riders)
     tails = ctrs_all[:, TAIL]
     used = (tails - ctrs_all[:, HEAD]).astype(jnp.int32)
 
@@ -264,7 +276,15 @@ def enqueue(
         incoming=grant[:, me],
         notifications=n_in,
     )
-    return QueueState(buf, ctrs), receipt
+    return QueueState(buf, ctrs), receipt, rider_out
+
+
+def enqueue(
+    desc: QueueDescriptor, state: QueueState, msgs: Array, dest: Array
+) -> tuple[QueueState, EnqueueReceipt]:
+    """`enqueue_epoch` without riders (the plain two-transfer append)."""
+    state, receipt, _ = enqueue_epoch(desc, state, msgs, dest)
+    return state, receipt
 
 
 def enqueue_shift(

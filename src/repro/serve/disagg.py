@@ -1,4 +1,4 @@
-"""Disaggregated prefill/decode serving over rmaq channels (DESIGN.md §6.7).
+"""Disaggregated prefill/decode serving over rmaq channels (DESIGN.md §6.7, §9).
 
 Modern serving separates the two inference phases onto different worker
 pools: *prefill* ranks are compute-bound (process whole prompts, build the
@@ -10,13 +10,25 @@ a collective.  This engine makes `repro.rmaq` load-bearing for it:
   * the mesh axis "serve" is split into prefill ranks [0, n_prefill) and
     decode ranks [n_prefill, p);
   * each prefill rank computes a request's KV block and **sends it over a
-    channel lane ("kv")** to its decode rank (round-robin by request id) —
-    a notified put into the decode rank's MPSC ring;
+    channel lane** to a decode rank — a notified put into the decode rank's
+    MPSC ring.  Each decode rank exposes `n_lanes` homogeneous kv lanes;
+    a lane is a *credit domain*, so the host scheduler can spread one
+    producer's requests across (rank, lane) pairs by credit availability —
+    multi-lane continuous batching;
   * decode ranks **drain their ring** each step and run attention readout
     over the received KV to emit tokens;
-  * backpressure is admission control: when a decode rank's ring is full,
-    the prefill rank's send is rejected and the host retries the request —
-    no KV block is ever dropped or overwritten.
+  * backpressure comes in two flavours (`DisaggConfig.flow`):
+      - **credit** (default): `rmaq.flow` credit-based admission.  The host
+        stages a request only onto a (rank, lane) whose device-held credit
+        cache (`limit - sent`, returned with the engine state every step)
+        covers it, so no send is ever rejected and nothing is ever replayed
+        over the wire — `retries` stays 0 by construction while the wire
+        cost per append is the same 2 fused transfers;
+      - **reject/retry** (legacy): a send that finds the ring full is
+        rejected at the origin and the host re-queues it — in *staging
+        order* (a batch splice at the queue head), so simultaneous
+        rejections keep their FIFO order; the old per-item `insert(0, ...)`
+        reversed them.
 
 Under SPMD every rank executes the same jitted step with role masks (a
 decode rank "computes" a zero KV block and sends to nobody; prefill ranks
@@ -26,8 +38,8 @@ asymmetric service, same trade as `core.dsde`'s slotted protocols.
 The model here is a deliberately small single-head attention stack
 (embedding KV producer + query readout decoder) so the engine runs
 end-to-end on CPU in tests and `examples/disagg_serve.py`; the channel
-mechanics — reservation, notified puts, drain, backpressure — are the
-production-shaped part and are independent of the model plugged in.
+mechanics — reservation, notified puts, drain, credits, backpressure — are
+the production-shaped part and are independent of the model plugged in.
 """
 
 from __future__ import annotations
@@ -41,7 +53,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.rmaq import channel as rch
+from repro.rmaq import flow as rfl
 from repro.rmaq import queue as rq
+from repro.serve.engine import DrainError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +66,22 @@ class DisaggConfig:
     vocab: int = 97
     queue_capacity: int = 16      # KV blocks a decode rank can hold in flight
     max_recv_per_step: int = 4    # decode drain width per step
+    n_lanes: int = 2              # kv lanes (credit domains) per decode rank
+    flow: bool = True             # credit-based admission vs reject/retry
+
+
+def _requeue_rejected(pending: list, staged: dict, sent_ok) -> int:
+    """Splice this step's rejected sends back onto the head of `pending`
+    in *staging order* (ascending prefill rank = the order they were popped),
+    ahead of everything not yet staged.  Returns the number re-queued.
+
+    The regression this guards: re-inserting each rejection at position 0
+    while iterating the staged dict reverses the relative order of multiple
+    same-step rejections, breaking request FIFO under sustained backpressure.
+    """
+    rejected = [staged[r] for r in sorted(staged) if not bool(sent_ok[r])]
+    pending[:0] = rejected
+    return len(rejected)
 
 
 class DisaggEngine:
@@ -64,6 +94,8 @@ class DisaggEngine:
         self.p = mesh.shape[axis]
         if not (0 < cfg.n_prefill < self.p):
             raise ValueError(f"need 0 < n_prefill < {self.p}, got {cfg.n_prefill}")
+        if cfg.n_lanes < 1:
+            raise ValueError(f"need n_lanes >= 1, got {cfg.n_lanes}")
         self.n_decode = self.p - cfg.n_prefill
 
         key = jax.random.PRNGKey(seed)
@@ -76,11 +108,19 @@ class DisaggEngine:
             "readout": jax.random.normal(ko, (cfg.d_model, cfg.vocab)) * scale,
         }
 
-        # one channel lane: a KV block [block_tokens, 2, d_model] per request
-        self.channel, self.qstate = rch.channel_allocate(
-            mesh, axis, cfg.queue_capacity,
-            lanes=[rch.Lane("kv", (cfg.block_tokens, 2, cfg.d_model), jnp.float32)],
-        )
+        # n_lanes homogeneous kv lanes: one KV block [bt, 2, d] per request;
+        # lanes share the ring but are separate credit domains
+        lanes = [rch.Lane(f"kv{i}", (cfg.block_tokens, 2, cfg.d_model), jnp.float32)
+                 for i in range(cfg.n_lanes)]
+        if cfg.flow:
+            self.channel, self.qstate, self.fstate = rfl.flow_allocate(
+                mesh, axis, cfg.queue_capacity, lanes,
+                n_producers=cfg.n_prefill,
+            )
+        else:
+            self.channel, self.qstate = rch.channel_allocate(
+                mesh, axis, cfg.queue_capacity, lanes)
+            self.fstate = None
         self._step = self._build_step()
         # trace-time message accounting: the KV shipping rides the queue's
         # epoch-scoped plans (DESIGN.md §8), so one abstract trace tells us
@@ -91,42 +131,28 @@ class DisaggEngine:
         # host-side request tracking
         self._pending: list[tuple[int, np.ndarray]] = []   # (req_id, tokens)
         self._n_submitted = 0
+        self._submitted_ids: set[int] = set()
         self.results: dict[int, int] = {}                  # req_id -> token
-        self.retries = 0
+        self.retries = 0           # wire sends replayed (reject/retry only)
+        self.credit_stalls = 0     # stage deferrals for want of credit (flow)
+        self.lane_sends = np.zeros((self.p, cfg.n_lanes), np.int64)
 
     # ----------------------------------------------------------- device step
     def _build_step(self):
-        cfg, axis, p = self.cfg, self.axis, self.p
+        cfg, axis = self.cfg, self.axis
         n_prefill, n_decode = cfg.n_prefill, self.n_decode
         ch = self.channel
-        specs = rq.state_specs(axis)
+        qspecs = rq.state_specs(axis)
+        fspecs = rfl.state_specs(axis)
 
-        def step(params, state, tokens, req_id):
-            """tokens [1, block_tokens] int32 (this rank's request, -1 = none);
-            req_id [1] int32.  Returns state', per-rank decode outputs."""
-            me = jax.lax.axis_index(axis)
-            state = rq.to_local(state)
-            toks = tokens[0]
-            rid = req_id[0]
-
-            # ---- prefill: build the KV block (masked on decode ranks)
-            is_prefill = (me < n_prefill) & (rid >= 0)
+        def compute_kv(params, toks):
             tok_safe = jnp.clip(toks, 0, cfg.vocab - 1)
             kblk = params["emb_k"][tok_safe]               # [bt, d]
             vblk = params["emb_v"][tok_safe]               # [bt, d]
-            kv_block = jnp.stack([kblk, vblk], axis=1)     # [bt, 2, d]
+            return jnp.stack([kblk, vblk], axis=1)         # [bt, 2, d]
 
-            # ---- ship it: one channel message to the owning decode rank
-            dest = jnp.where(
-                is_prefill, n_prefill + jnp.maximum(rid, 0) % n_decode, -1
-            ).astype(jnp.int32)
-            state, receipt = ch.send(
-                state, "kv", kv_block[None], rid[None], dest[None]
-            )
-
-            # ---- decode: drain the ring, attention readout per KV block
-            state, batch = ch.recv(state, cfg.max_recv_per_step)
-            kv_in, mask = ch.payload(batch, "kv")          # [m, bt, 2, d]
+        def decode_batch(params, batch):
+            kv_in, mask = ch.payload_all(batch)            # [m, bt, 2, d]
             k_in, v_in = kv_in[:, :, 0], kv_in[:, :, 1]    # [m, bt, d]
             attn = jax.nn.softmax(
                 jnp.einsum("mtd,d->mt", k_in, params["w_q"]), axis=-1
@@ -135,10 +161,61 @@ class DisaggEngine:
             logits = ctx @ params["readout"]               # [m, vocab]
             out_tok = jnp.where(mask, jnp.argmax(logits, -1).astype(jnp.int32), -1)
             out_req = jnp.where(mask, batch.tag, -1)
+            return out_req, out_tok
 
+        if cfg.flow:
+            def step(params, qstate, fstate, tokens, req_id, dest, lane):
+                """Per-rank [1, ...] inputs: this rank's staged request
+                (req_id -1 = none), its target decode rank and kv lane."""
+                me = jax.lax.axis_index(axis)
+                qstate = rq.to_local(qstate)
+                fstate = rfl.to_local(fstate)
+                toks, rid = tokens[0], req_id[0]
+
+                is_prefill = (me < n_prefill) & (rid >= 0)
+                kv_block = compute_kv(params, toks)
+                dest_eff = jnp.where(is_prefill, dest[0], -1).astype(jnp.int32)
+                qstate, fstate, receipt = rfl.send(
+                    ch, qstate, fstate, "kv0",
+                    kv_block[None], rid[None], dest_eff[None], lane[0],
+                )
+                qstate, fstate, batch = rfl.recv(
+                    ch, qstate, fstate, cfg.max_recv_per_step)
+                out_req, out_tok = decode_batch(params, batch)
+                sent_ok = receipt.accepted[0] & is_prefill
+                return (
+                    rq.to_global(qstate), rfl.to_global(fstate),
+                    out_req[None], out_tok[None], sent_ok[None],
+                    receipt.rejected[None],
+                )
+
+            return jax.jit(
+                shard_map(
+                    step,
+                    mesh=self.mesh,
+                    in_specs=(P(), qspecs, fspecs, P(axis, None), P(axis),
+                              P(axis), P(axis, None)),
+                    out_specs=(qspecs, fspecs, P(axis, None), P(axis, None),
+                               P(axis), P(axis, None)),
+                    check_vma=False,
+                )
+            )
+
+        def step(params, qstate, tokens, req_id, dest, lane):
+            me = jax.lax.axis_index(axis)
+            qstate = rq.to_local(qstate)
+            toks, rid = tokens[0], req_id[0]
+
+            is_prefill = (me < n_prefill) & (rid >= 0)
+            kv_block = compute_kv(params, toks)
+            dest_eff = jnp.where(is_prefill, dest[0], -1).astype(jnp.int32)
+            msgs = ch.packed("kv0", kv_block[None], rid[None], lane_id=lane[0])
+            qstate, receipt = rq.enqueue(ch.desc, qstate, msgs, dest_eff[None])
+            qstate, batch = ch.recv(qstate, cfg.max_recv_per_step)
+            out_req, out_tok = decode_batch(params, batch)
             sent_ok = receipt.accepted[0] & is_prefill
             return (
-                rq.to_global(state),
+                rq.to_global(qstate),
                 out_req[None], out_tok[None], sent_ok[None],
             )
 
@@ -146,8 +223,9 @@ class DisaggEngine:
             shard_map(
                 step,
                 mesh=self.mesh,
-                in_specs=(P(), specs, P(axis, None), P(axis)),
-                out_specs=(specs, P(axis, None), P(axis, None), P(axis)),
+                in_specs=(P(), qspecs, P(axis, None), P(axis), P(axis),
+                          P(axis, None)),
+                out_specs=(qspecs, P(axis, None), P(axis, None), P(axis)),
                 check_vma=False,
             )
         )
@@ -157,14 +235,17 @@ class DisaggEngine:
         the raw vs coalesced (wire) message counts of the KV-shipping path."""
         from repro.core.rma import OpCounter
 
+        state = (self.params, self.qstate) if self.fstate is None else (
+            self.params, self.qstate, self.fstate)
         like = jax.tree.map(
-            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
-            (self.params, self.qstate),
-        )
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
         tokens = jax.ShapeDtypeStruct((self.p, self.cfg.block_tokens), jnp.int32)
         req_id = jax.ShapeDtypeStruct((self.p,), jnp.int32)
+        dest = jax.ShapeDtypeStruct((self.p,), jnp.int32)
+        lane = jax.ShapeDtypeStruct((self.p, 1), jnp.int32)
         with OpCounter() as c:
-            self._step.lower(like[0], like[1], tokens, req_id)
+            self._step.lower(*like, tokens, req_id, dest, lane)
+        bytes_wire = sum(pl.get("bytes_wire", 0) for pl in c.plans)
         return {
             "raw_msgs_per_step": c.raw_msgs,
             "wire_msgs_per_step": c.coalesced_msgs,
@@ -172,6 +253,7 @@ class DisaggEngine:
             "puts": c.puts,
             "gets": c.gets,
             "accs": c.accs,
+            "bytes_wire_per_step": bytes_wire,
         }
 
     # ------------------------------------------------------------ host side
@@ -181,6 +263,32 @@ class DisaggEngine:
             raise ValueError(f"prompt must be [{self.cfg.block_tokens}] tokens")
         self._pending.append((req_id, toks))
         self._n_submitted += 1
+        self._submitted_ids.add(int(req_id))
+
+    def _host_credits(self) -> np.ndarray:
+        """[p(producer), p(target), L] credits the device-side caches hold —
+        read back from the returned flow state, so host admission mirrors
+        the device protocol exactly (same one-epoch refresh staleness)."""
+        limit = np.asarray(self.fstate.limit).astype(np.int64)
+        sent = np.asarray(self.fstate.sent).astype(np.int64)
+        return limit - sent
+
+    def _select_lane(self, credits: np.ndarray, r: int) -> tuple[int, int] | None:
+        """Credit-aware lane selection for producer r: the (decode rank,
+        lane) with the most available credit, ties broken toward the least
+        historically loaded lane (continuous batching spreads work instead
+        of camping on the first lane); None when every lane is dry (the
+        request stays pending — no wire traffic, nothing to retry)."""
+        best, best_key = None, None
+        for t in range(self.cfg.n_prefill, self.p):
+            for ln in range(self.cfg.n_lanes):
+                c = credits[r, t, ln]
+                if c < 1:
+                    continue
+                key = (c, -self.lane_sends[t, ln])
+                if best_key is None or key > best_key:
+                    best, best_key = (t, ln), key
+        return best
 
     def step(self) -> int:
         """One engine step: assign pending requests to prefill ranks, run the
@@ -188,25 +296,65 @@ class DisaggEngine:
         cfg, p = self.cfg, self.p
         tokens = np.full((p, cfg.block_tokens), -1, np.int32)
         req_id = np.full((p,), -1, np.int32)
+        dest = np.full((p,), -1, np.int32)
+        lane = np.zeros((p, 1), np.int32)
         staged: dict[int, tuple[int, np.ndarray]] = {}
-        for r in range(cfg.n_prefill):
-            if self._pending:
+
+        if cfg.flow:
+            credits = self._host_credits()
+            budget = credits.copy()
+            for r in range(cfg.n_prefill):
+                if not self._pending:
+                    break
+                sel = self._select_lane(budget, r)
+                if sel is None:
+                    self.credit_stalls += 1
+                    continue               # r idles this step; request waits
+                t, ln = sel
                 rid, toks = self._pending.pop(0)
-                tokens[r], req_id[r] = toks, rid
+                tokens[r], req_id[r], dest[r], lane[r, 0] = toks, rid, t, ln
                 staged[r] = (rid, toks)
+                budget[r, t, ln] -= 1
+                self.lane_sends[t, ln] += 1
+        else:
+            # legacy: round-robin by request id, single implicit lane
+            for r in range(cfg.n_prefill):
+                if self._pending:
+                    rid, toks = self._pending.pop(0)
+                    tokens[r], req_id[r] = toks, rid
+                    dest[r] = cfg.n_prefill + max(rid, 0) % self.n_decode
+                    staged[r] = (rid, toks)
 
-        self.qstate, out_req, out_tok, sent_ok = self._step(
-            self.params, self.qstate, jnp.asarray(tokens), jnp.asarray(req_id)
-        )
+        if cfg.flow:
+            (self.qstate, self.fstate, out_req, out_tok, sent_ok,
+             rejected) = self._step(
+                self.params, self.qstate, self.fstate,
+                jnp.asarray(tokens), jnp.asarray(req_id),
+                jnp.asarray(dest), jnp.asarray(lane),
+            )
+            if int(np.asarray(rejected).sum()):
+                raise RuntimeError(
+                    "credit conservation violated: a credited send was "
+                    "rejected at the ring (mixed credited/uncredited "
+                    "producers on one channel?)"
+                )
+            sent_ok = np.asarray(sent_ok)
+            # a credit-admitted send is never rejected: nothing to re-queue
+            lost = [staged[r] for r in sorted(staged) if not bool(sent_ok[r])]
+            if lost:
+                raise RuntimeError(f"credited sends not delivered: {lost}")
+        else:
+            self.qstate, out_req, out_tok, sent_ok = self._step(
+                self.params, self.qstate,
+                jnp.asarray(tokens), jnp.asarray(req_id),
+                jnp.asarray(dest), jnp.asarray(lane),
+            )
+            sent_ok = np.asarray(sent_ok)
+            # backpressure: rejected sends go back to the head of the queue
+            # in staging order (FIFO-preserving batch splice)
+            self.retries += _requeue_rejected(self._pending, staged, sent_ok)
+
         out_req, out_tok = np.asarray(out_req), np.asarray(out_tok)
-        sent_ok = np.asarray(sent_ok)
-
-        # backpressure: rejected sends go back to the head of the queue
-        for r, (rid, toks) in staged.items():
-            if req_id[r] >= 0 and not bool(sent_ok[r]):
-                self._pending.insert(0, (rid, toks))
-                self.retries += 1
-
         emitted = 0
         for r in range(cfg.n_prefill, p):
             for rid, tok in zip(out_req[r], out_tok[r]):
@@ -217,9 +365,16 @@ class DisaggEngine:
 
     def run_until_drained(self, max_steps: int = 1000) -> dict[int, int]:
         """Step until every submitted request has a result — including
-        requests already in flight inside the decode rings."""
+        requests already in flight inside the decode rings.  Raises
+        `DrainError` with the undrained request ids if `max_steps` is
+        exhausted; partial results are never reported as drained."""
         steps = 0
-        while len(self.results) < self._n_submitted and steps < max_steps:
+        while len(self.results) < self._n_submitted:
+            if steps >= max_steps:
+                undrained = sorted(self._submitted_ids - set(self.results))
+                raise DrainError(
+                    f"not drained after {max_steps} steps", tuple(undrained)
+                )
             self.step()
             steps += 1
         return self.results
@@ -236,3 +391,18 @@ class DisaggEngine:
 
     def queue_stats(self) -> dict:
         return {k: np.asarray(v) for k, v in rq.stats(self.qstate).items()}
+
+    def flow_stats(self) -> dict:
+        """Credit-path instrumentation (flow mode only)."""
+        if self.fstate is None:
+            return {}
+        cons = rfl.conservation(self.channel, self.qstate, self.fstate)
+        return {
+            "credit_stalls": self.credit_stalls,
+            "retries": self.retries,
+            "lane_sends": self.lane_sends.copy(),
+            "conservation_ok": bool(
+                (cons["granted_minus_head"] == cons["capacity"]).all()
+                and (cons["outstanding_plus_occupancy"] == cons["capacity"]).all()
+            ),
+        }

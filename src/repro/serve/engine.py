@@ -2,13 +2,35 @@
 
 Host-side admission control uses the *paper's lock protocol* (see
 `core.locks_sim`): request threads take shared locks on the cache window to
-append, the scheduler takes the exclusive lock to compact/evict — a live
-deployment of MPI_Win_lock semantics where gang-scheduled device code cannot
-express them (DESIGN.md §5.1).
+append, the scheduler takes the exclusive lock to mutate shared engine state
+— a live deployment of MPI_Win_lock semantics where gang-scheduled device
+code cannot express them (DESIGN.md §5.1).
+
+Lock discipline (DESIGN.md §9.4) — every section is classified by what it
+touches, not by who calls it:
+
+  * **exclusive** — slot-table mutation: allocating a lane to a request and
+    recycling a finished lane (`slot_free`/`slot_req` writes, `done.set()`).
+    These are writer sections whoever runs them; the historical bug was
+    `admit()` recycling an instantly-finished lane under its *shared* lock.
+    `_recycle()` carries a tripwire: it refuses to run unless the window's
+    writer bit is set, so a regression to reader-locked recycling fails
+    loudly in the threaded stress test.
+  * **shared** — per-lane cache appends (prefill into a fresh lane, decode
+    appending one token per active lane): disjoint window regions, many
+    readers/appenders at once.  The host-side `self.cache` *reference swap*
+    is additionally guarded by a plain mutex — a real window's regions are
+    physically disjoint; a Python tree reference is not, so the mutex stands
+    in for that property (it is NOT part of the §2.3 protocol).
 
 Device-side the engine runs two jitted programs: `prefill` (one sequence at
 a time into its cache lane) and `decode_step` (all active lanes, one token).
 Slots are fixed (static shapes); finished lanes are recycled.
+
+`schedule()` is the unified scheduler tick — admit, decode, recycle — and
+`run_until_drained` loops it, raising `DrainError` (with the undrained
+request ids) instead of silently returning partial results when `max_steps`
+is exhausted.
 """
 
 from __future__ import annotations
@@ -16,14 +38,32 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.locks_sim import LockOrigin, LockWindow
+from repro.core.locks_sim import WRITER_BIT, LockOrigin, LockWindow
 from repro.models.registry import Model
+
+
+class LockDisciplineError(RuntimeError):
+    """A writer section ran without the exclusive lock (§2.3 violation)."""
+
+
+class DrainError(RuntimeError):
+    """`run_until_drained` exhausted `max_steps` with work still queued."""
+
+    def __init__(self, message: str, undrained: tuple):
+        super().__init__(f"{message}; undrained request ids: {list(undrained)}")
+        self.undrained = tuple(undrained)
+
+
+class ScheduleTick(NamedTuple):
+    admitted: int
+    emitted: int
+    recycled: int
 
 
 @dataclasses.dataclass
@@ -43,6 +83,10 @@ class ServeEngine:
         self.max_seq = max_seq
         self.cache = model.init_cache(n_slots, max_seq)
         self.slot_free = [True] * n_slots
+        # ready = prefill landed; decode must skip allocated-but-unprefilled
+        # lanes (an admitting request thread may be between its exclusive
+        # allocation and its shared-lock prefill when the scheduler decodes)
+        self.slot_ready = [False] * n_slots
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
         self.slot_last = np.zeros(n_slots, np.int32)
@@ -50,6 +94,9 @@ class ServeEngine:
         # admission control: paper's RW lock over the cache window
         self.lock_win = LockWindow(p=1)
         self.lock = LockOrigin(self.lock_win, rank=0)
+        # host stand-in for window-region disjointness (see module docstring)
+        self._cache_mu = threading.Lock()
+        self.recycled_total = 0
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(self._prefill_impl, static_argnames=("plen",))
 
@@ -75,74 +122,158 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.queue.put(req)
 
+    # ------------------------------------------------- locked state sections
+    def _alloc_slot(self) -> Optional[tuple[Request, int]]:
+        """Exclusive section: claim (queue head, free slot), or None."""
+        self.lock.lock_exclusive(0)
+        try:
+            if self.queue.empty() or not any(self.slot_free):
+                return None
+            try:
+                req = self.queue.get_nowait()
+            except queue.Empty:
+                return None
+            slot = self.slot_free.index(True)
+            self.slot_free[slot] = False
+            self.slot_ready[slot] = False
+            self.slot_req[slot] = req
+            return req, slot
+        finally:
+            self.lock.unlock_exclusive(0)
+
+    def _recycle(self, slot: int) -> None:
+        """Writer section: free a finished lane.  MUST run inside an
+        exclusive lock epoch — asserted on the lock window itself, so a
+        regression to reader-locked recycling (the historical `admit()` bug)
+        raises instead of silently corrupting the slot table."""
+        if not (self.lock_win.local[0].v & WRITER_BIT):
+            raise LockDisciplineError(
+                "lane recycle without the exclusive lock (writer bit clear)"
+            )
+        req = self.slot_req[slot]
+        self.slot_free[slot] = True
+        self.slot_ready[slot] = False
+        self.slot_req[slot] = None
+        if req is not None:
+            self.recycled_total += 1
+            req.done.set()
+
     # ------------------------------------------------------------ steps
     def admit(self) -> int:
-        """Admit queued requests into free slots (shared-lock section)."""
+        """Admit queued requests into free slots.
+
+        Slot allocation is an exclusive (writer) section; the prefill that
+        appends the new lane's K/V rows runs under the shared lock, like any
+        other per-lane cache append.  A request whose prefill already
+        produced all requested tokens is recycled under the exclusive lock —
+        the §2.3 fix: the old code mutated the slot table (and signalled
+        `done`) while holding only the reader lock.
+        """
         admitted = 0
-        while not self.queue.empty() and any(self.slot_free):
-            req = self.queue.get()
-            slot = self.slot_free.index(True)
+        while True:
+            claim = self._alloc_slot()
+            if claim is None:
+                return admitted
+            req, slot = claim
             self.lock.lock_shared(0)
             try:
                 plen = len(req.prompt)
                 tokens = jnp.zeros((self.max_seq,), jnp.int32).at[:plen].set(
                     jnp.asarray(req.prompt, jnp.int32)
                 )
-                logits, self.cache = self._prefill(
-                    self.params, self.cache, tokens, slot, plen=plen
-                )
-                self.slot_free[slot] = False
-                self.slot_req[slot] = req
+                with self._cache_mu:
+                    logits, self.cache = self._prefill(
+                        self.params, self.cache, tokens, slot, plen=plen
+                    )
                 self.slot_pos[slot] = plen
                 first = int(jnp.argmax(logits))
                 self.slot_last[slot] = first
                 req.output.append(first)   # the prefill already produced token 1
-                if len(req.output) >= req.max_new:
-                    self.slot_free[slot] = True
-                    self.slot_req[slot] = None
-                    req.done.set()
-                admitted += 1
+                if len(req.output) < req.max_new:
+                    # decode may pick the lane up now; an instantly-finished
+                    # request must never become visible to the decoder (the
+                    # scheduler could emit an extra token — or recycle the
+                    # lane before our exclusive recycle below runs)
+                    self.slot_ready[slot] = True
             finally:
                 self.lock.unlock_shared(0)
-        return admitted
+            if len(req.output) >= req.max_new:
+                self.lock.lock_exclusive(0)
+                try:
+                    self._recycle(slot)
+                finally:
+                    self.lock.unlock_exclusive(0)
+            admitted += 1
 
     def step(self) -> int:
         """One decode step over all active lanes; returns #tokens emitted."""
-        active = [i for i in range(self.n_slots) if not self.slot_free[i]]
-        if not active:
-            return 0
-        tokens = jnp.asarray(self.slot_last, jnp.int32)
-        # the cache len is per-engine-step: use max position (static shapes);
-        # per-slot masking comes from kv_valid_len inside attention
-        cache = dict(self.cache)
-        cache["len"] = jnp.asarray(int(self.slot_pos.max()), jnp.int32)
-        logits, new_cache = self._decode(self.params, tokens, cache)
-        self.cache = new_cache
-        emitted = 0
-        nxt = np.asarray(jnp.argmax(logits, -1))
-        for i in active:
-            req = self.slot_req[i]
-            req.output.append(int(nxt[i]))
-            self.slot_last[i] = int(nxt[i])
-            self.slot_pos[i] += 1
-            emitted += 1
-            if len(req.output) >= req.max_new or self.slot_pos[i] >= self.max_seq - 1:
-                # exclusive-lock section: recycle the lane
-                self.lock.lock_exclusive(0)
-                try:
-                    self.slot_free[i] = True
-                    self.slot_req[i] = None
-                    req.done.set()
-                finally:
-                    self.lock.unlock_exclusive(0)
+        self.lock.lock_shared(0)
+        try:
+            active = [i for i in range(self.n_slots)
+                      if not self.slot_free[i] and self.slot_ready[i]]
+            if not active:
+                return 0
+            tokens = jnp.asarray(self.slot_last, jnp.int32)
+            # the cache len is per-engine-step: use max position (static
+            # shapes); per-slot masking comes from kv_valid_len in attention
+            with self._cache_mu:
+                cache = dict(self.cache)
+                cache["len"] = jnp.asarray(int(self.slot_pos.max()), jnp.int32)
+                logits, new_cache = self._decode(self.params, tokens, cache)
+                self.cache = new_cache
+            emitted = 0
+            finished = []
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            for i in active:
+                req = self.slot_req[i]
+                if req is None:            # recycled concurrently mid-step
+                    continue
+                req.output.append(int(nxt[i]))
+                self.slot_last[i] = int(nxt[i])
+                self.slot_pos[i] += 1
+                emitted += 1
+                if len(req.output) >= req.max_new or self.slot_pos[i] >= self.max_seq - 1:
+                    finished.append(i)
+        finally:
+            self.lock.unlock_shared(0)
+        if finished:
+            # exclusive-lock section: recycle the finished lanes
+            self.lock.lock_exclusive(0)
+            try:
+                for i in finished:
+                    self._recycle(i)
+            finally:
+                self.lock.unlock_exclusive(0)
         return emitted
 
-    def run_until_drained(self, max_steps: int = 10_000) -> None:
+    def schedule(self) -> ScheduleTick:
+        """One unified scheduler tick: admit, decode, recycle."""
+        before = self.recycled_total
+        admitted = self.admit()
+        emitted = self.step()
+        return ScheduleTick(admitted, emitted, self.recycled_total - before)
+
+    def _undrained_rids(self) -> tuple:
+        queued = [r.rid for r in list(self.queue.queue)]
+        slotted = [r.rid for r in self.slot_req if r is not None]
+        return tuple(sorted(set(queued + slotted)))
+
+    def run_until_drained(self, max_steps: int = 10_000) -> int:
+        """Schedule until queue and slots are empty; returns steps taken.
+
+        Raises `DrainError` (with the undrained request ids) when
+        `max_steps` is exhausted — partial progress is never reported as a
+        drained engine.
+        """
         steps = 0
-        while (not self.queue.empty() or any(not f for f in self.slot_free)) and steps < max_steps:
-            self.admit()
-            self.step()
+        while not self.queue.empty() or any(not f for f in self.slot_free):
+            if steps >= max_steps:
+                raise DrainError(
+                    f"not drained after {max_steps} steps", self._undrained_rids()
+                )
+            self.schedule()
             steps += 1
+        return steps
 
 
 def _batch_axis(full_shape, lane_shape) -> Optional[int]:

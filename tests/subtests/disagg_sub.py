@@ -1,19 +1,25 @@
 """Multi-device: disaggregated prefill/decode serving over rmaq channels.
 
-Every emitted token must match the single-host reference, KV blocks must
-flow only into decode ranks' rings, and backpressure must retry (not drop)
-requests when the decode rings are undersized."""
+Every emitted token must match the single-host reference in BOTH
+backpressure modes; the credit path (DESIGN.md §9) must never reject or
+retry a send while keeping the same 2-transfer wire cost; the legacy
+reject/retry path must re-queue same-step rejections in FIFO order; and
+`run_until_drained` must raise (never report partial results as drained)
+when its step budget runs out."""
 import jax
 import numpy as np
 
 from repro.serve.disagg import DisaggConfig, DisaggEngine
+from repro.serve.engine import DrainError
 
 n = len(jax.devices())
 mesh = jax.make_mesh((n,), ("serve",))
 
+# ---- credit-based flow control, multi-lane continuous batching -----------
 cfg = DisaggConfig(n_prefill=n // 2, block_tokens=8, d_model=16, vocab=61,
-                   queue_capacity=8, max_recv_per_step=2)
+                   queue_capacity=8, max_recv_per_step=2, n_lanes=2, flow=True)
 eng = DisaggEngine(mesh, "serve", cfg, seed=3)
+assert eng.msg_stats["wire_msgs_per_step"] == 2, eng.msg_stats  # append = 2 fused
 
 rng = np.random.RandomState(0)
 prompts = {i: rng.randint(0, cfg.vocab, size=cfg.block_tokens) for i in range(9)}
@@ -27,12 +33,20 @@ stats = eng.queue_stats()
 assert stats["enqueued"][: cfg.n_prefill].sum() == 0   # prefill rings stay empty
 assert stats["enqueued"].sum() == len(prompts)         # one KV block per request
 assert stats["notifications"].sum() == len(prompts)
-print(f"PASS disagg serve: {len(res)} tokens == reference; "
-      f"kv blocks per decode rank = {stats['enqueued'][cfg.n_prefill:]}")
+assert stats["dropped_by_me"].sum() == 0               # never bounced at a ring
+fstats = eng.flow_stats()
+assert eng.retries == 0, eng.retries                   # credits: nothing replayed
+assert fstats["conservation_ok"], fstats
+assert fstats["lane_sends"].sum() == len(prompts)
+# continuous batching spreads load: every decode rank served some request
+assert (fstats["lane_sends"][cfg.n_prefill:].sum(axis=1) > 0).all(), fstats
+print(f"PASS disagg flow serve: {len(res)} tokens == reference; retries=0; "
+      f"lane sends per (rank, lane) = {fstats['lane_sends'][cfg.n_prefill:].tolist()}")
 
-# tiny decode ring (capacity 2, drain 1) forces backpressure retries
-cfg2 = DisaggConfig(n_prefill=n // 2, block_tokens=8, d_model=16, vocab=61,
-                    queue_capacity=2, max_recv_per_step=1)
+# ---- tiny ring, one decode rank: credit exhaustion defers at the origin,
+# still 0 retries (in-rate 3/step vs drain 1/step must go dry)
+cfg2 = DisaggConfig(n_prefill=n - 1, block_tokens=8, d_model=16, vocab=61,
+                    queue_capacity=4, max_recv_per_step=1, n_lanes=1, flow=True)
 eng2 = DisaggEngine(mesh, "serve", cfg2, seed=3)
 for rid, toks in prompts.items():
     eng2.submit(rid, toks)
@@ -40,4 +54,56 @@ res2 = eng2.run_until_drained()
 assert len(res2) == len(prompts)
 for rid, toks in prompts.items():
     assert res2[rid] == eng2.reference(toks), rid
-print(f"PASS disagg backpressure: retries={eng2.retries}, no request lost")
+assert eng2.retries == 0
+assert eng2.queue_stats()["dropped_by_me"].sum() == 0
+assert eng2.credit_stalls > 0        # backpressure became origin-side stalls
+assert eng2.flow_stats()["conservation_ok"]
+print(f"PASS disagg flow backpressure: credit_stalls={eng2.credit_stalls}, "
+      f"retries=0, no request lost")
+
+# ---- legacy reject/retry path: retries happen, nothing is lost -----------
+cfg3 = DisaggConfig(n_prefill=n - 1, block_tokens=8, d_model=16, vocab=61,
+                    queue_capacity=2, max_recv_per_step=1, n_lanes=1, flow=False)
+eng3 = DisaggEngine(mesh, "serve", cfg3, seed=3)
+for rid, toks in prompts.items():
+    eng3.submit(rid, toks)
+res3 = eng3.run_until_drained()
+assert len(res3) == len(prompts)
+for rid, toks in prompts.items():
+    assert res3[rid] == eng3.reference(toks), rid
+assert eng3.retries > 0              # the scheme this engine demonstrates
+print(f"PASS disagg reject/retry: retries={eng3.retries}, no request lost")
+
+# ---- forced-queue-full FIFO regression: same-step rejections keep order --
+# all requests target ONE decode rank (n_decode=1) with a 2-slot ring and a
+# 1-wide drain, so a step with 3 staged sends rejects >=2 at once; the fix
+# re-queues them in staging order and the ring then delivers strictly FIFO.
+if n >= 4:
+    cfg4 = DisaggConfig(n_prefill=n - 1, block_tokens=8, d_model=16, vocab=61,
+                        queue_capacity=2, max_recv_per_step=1, n_lanes=1,
+                        flow=False)
+    eng4 = DisaggEngine(mesh, "serve", cfg4, seed=3)
+    for rid, toks in prompts.items():
+        eng4.submit(rid, toks)
+    eng4.step()
+    eng4.step()
+    pend = [rid for rid, _ in eng4._pending]
+    assert pend == sorted(pend), f"requeue broke FIFO: {pend}"
+    res4 = eng4.run_until_drained()
+    delivered = list(res4)           # dict preserves emission order
+    assert delivered == sorted(delivered), f"delivery not FIFO: {delivered}"
+    assert eng4.retries >= 2
+    print(f"PASS requeue FIFO: retries={eng4.retries}, "
+          f"delivery order {delivered}")
+
+# ---- exhausted step budget raises, with the undrained ids ----------------
+eng5 = DisaggEngine(mesh, "serve", cfg2, seed=3)
+for rid, toks in prompts.items():
+    eng5.submit(rid, toks)
+try:
+    eng5.run_until_drained(max_steps=1)
+except DrainError as e:
+    assert len(e.undrained) > 0 and set(e.undrained) <= set(prompts)
+    print(f"PASS drain timeout raises: {len(e.undrained)} undrained ids reported")
+else:
+    raise AssertionError("run_until_drained returned despite max_steps=1")

@@ -29,3 +29,7 @@ def test_rma_api_surface():
 
 def test_deferred_plan_substrate():
     run_subtest("plan_sub.py", devices=8)
+
+
+def test_credit_flow_control():
+    run_subtest("flow_sub.py", devices=8)

@@ -1,0 +1,187 @@
+"""Credit-based flow control (DESIGN.md §9): host-path protocol invariants
+(exhaustion → refresh → recovery, conservation under multi-producer load),
+the flow-control perf model and its crossover, the reject/retry requeue
+ordering fix — plus the 8-device SPMD path via `test_distributed`."""
+
+import numpy as np
+import pytest
+
+from repro.core.perfmodel import DEFAULT_MODEL
+from repro.rmaq.channel import Lane
+from repro.rmaq.flow import FlowError, HostFlowChannel, initial_grants
+from repro.serve.disagg import _requeue_rejected
+
+from .helpers import given, settings, st
+
+
+# ------------------------------------------------------------ initial grants
+class TestInitialGrants:
+    def test_partition_is_exact_and_producer_limited(self):
+        g = initial_grants(4, 2, 16, n_producers=2)
+        assert g.sum() == 16                       # conservation starts exact
+        assert (g[2:] == 0).all()                  # non-producers hold nothing
+        assert (g[:2] > 0).all()                   # every producer-lane funded
+
+    def test_remainder_distributed(self):
+        g = initial_grants(3, 1, 8, n_producers=3)
+        assert g.sum() == 8 and g.max() - g.min() <= 1
+
+    def test_capacity_must_fund_every_producer_lane(self):
+        with pytest.raises(FlowError):
+            initial_grants(4, 2, 4, n_producers=4)  # 4 < 4*2
+
+
+# ----------------------------------------------------------- host flow channel
+class TestHostFlowCredits:
+    def _fc(self, p=2, capacity=4, n_producers=None):
+        return HostFlowChannel(p, capacity, [Lane("kv", (1,), "float32")],
+                               n_producers=n_producers)
+
+    def test_exhaustion_refresh_recovery_round_trip(self):
+        """The satellite round trip: spend the cache dry -> deferred sends
+        with a refresh attempt -> consumer drains (credits granted back) ->
+        refresh picks them up -> sends recover.  Nothing is ever rejected
+        at the ring."""
+        fc = self._fc(p=2, capacity=4)             # 2 credits per producer
+        sent = [fc.send(1, "kv", [float(i)], tag=i, dest=0) for i in range(4)]
+        assert sent == [True, True, False, False]  # cache dry after 2
+        assert fc.deferred == 2 and fc.refreshes >= 1
+        fc.flush()
+        assert fc.rejected == 0                    # credited sends never bounce
+
+        drained = fc.recv(0)                       # grants 2 credits back
+        assert [float(m["payload"][0]) for m in drained] == [0.0, 1.0]
+
+        refreshes_before = fc.refreshes
+        assert fc.send(1, "kv", [9.0], tag=9, dest=0)   # recovery via refresh
+        assert fc.refreshes == refreshes_before + 1     # cache was dry: 1 get
+        assert fc.send(1, "kv", [10.0], tag=10, dest=0)
+        assert fc.refreshes == refreshes_before + 1     # cache warm: no get
+        fc.flush()
+        assert fc.rejected == 0
+        assert [float(m["payload"][0]) for m in fc.recv(0)] == [9.0, 10.0]
+
+    def test_common_path_never_refreshes(self):
+        """A sender that stays within its credit batch pays zero refreshes —
+        the wire-identical common path."""
+        fc = self._fc(p=2, capacity=8)             # 4 credits per producer
+        for i in range(4):
+            assert fc.send(1, "kv", [float(i)], tag=i, dest=0)
+        assert fc.refreshes == 0 and fc.deferred == 0
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_conservation_under_multi_producer_load(self, seed):
+        """sum(outstanding credits) + ring occupancy == capacity for every
+        target, at every quiescent point, under random multi-producer
+        traffic with random partial drains."""
+        rng = np.random.RandomState(seed)
+        p, cap = 4, 8
+        fc = self._fc(p=p, capacity=cap)
+        for _ in range(12):
+            for src in range(p):
+                for _ in range(rng.randint(0, 4)):
+                    fc.send(src, "kv", [1.0], tag=0, dest=rng.randint(0, p))
+            fc.flush()
+            assert fc.rejected == 0
+            for t in range(p):
+                if rng.rand() < 0.7:
+                    fc.recv(t, max_n=rng.randint(0, cap + 1))
+                c = fc.conservation(t)
+                assert c["granted_minus_head"] == cap, c
+                assert c["outstanding_plus_occupancy"] == cap, c
+
+    def test_fifo_preserved_per_producer(self):
+        fc = self._fc(p=2, capacity=8)
+        seen = []
+        serial = 0.0
+        for _ in range(6):
+            while fc.send(1, "kv", [serial], tag=0, dest=0):
+                serial += 1.0
+            fc.flush()
+            seen += [float(m["payload"][0]) for m in fc.recv(0)]
+        assert seen == sorted(seen)                # FIFO survives credit gating
+        assert fc.rejected == 0
+
+
+# ----------------------------------------------------- wrap-safe refresh
+class TestAdvanceLimit:
+    def test_survives_uint32_wrap(self):
+        """Cumulative grant counters wrap mod 2**32; the refresh must keep
+        advancing across the wrap (a plain maximum would stall forever)."""
+        import jax.numpy as jnp
+
+        from repro.rmaq.flow import _advance_limit
+
+        limit = jnp.asarray([[2**32 - 2]], jnp.uint32)
+        fresh = jnp.asarray([[3]], jnp.uint32)          # +5 across the wrap
+        out = _advance_limit(limit, fresh)
+        assert int(out[0, 0]) == 3
+        # a stale (behind) fresh value never moves the cache backwards
+        out = _advance_limit(fresh, limit)
+        assert int(out[0, 0]) == 3
+
+
+# ------------------------------------------------------ flow-control model
+class TestFlowModel:
+    def test_fused_refresh_is_free(self):
+        m = DEFAULT_MODEL
+        assert m.p_credit_refresh(fused=True) == 0.0
+        assert m.p_credit_refresh(fused=False) > 0.0
+
+    def test_credit_common_path_matches_retry_accept_path(self):
+        """At zero occupancy (no rejects, no refreshes) the two schemes cost
+        the same — the credit path is wire-identical by construction."""
+        m = DEFAULT_MODEL
+        nb = 4096.0
+        assert m.p_enqueue_credit(nb, credit_batch=4) == pytest.approx(
+            m.p_enqueue_retry(nb, occupancy=0.0))
+
+    def test_retry_cost_diverges_with_occupancy(self):
+        m = DEFAULT_MODEL
+        nb = 1024.0
+        costs = [m.p_enqueue_retry(nb, f) for f in (0.0, 0.5, 0.9, 0.99)]
+        assert costs == sorted(costs) and costs[-1] > 10 * costs[0]
+        # credit cost is occupancy-independent
+        assert m.p_enqueue_credit(nb, 4) == costs[0]
+
+    def test_crossover_occupancy(self):
+        m = DEFAULT_MODEL
+        # fused refresh: credit never loses, crossover at 0
+        assert m.flow_crossover_occupancy(1024.0, 4, fused=True) == 0.0
+        # standalone refresh: a real crossover strictly inside (0, 1),
+        # moving earlier as the credit batch grows (better amortization)
+        x1 = m.flow_crossover_occupancy(1024.0, 1)
+        x8 = m.flow_crossover_occupancy(1024.0, 8)
+        assert 0.0 < x8 <= x1 < 1.0
+        assert m.select_flow_control(1024.0, x1, 1, fused=False) == "credit"
+        assert m.select_flow_control(1024.0, max(x1 - 0.02, 0.0), 1,
+                                     fused=False) == "retry"
+
+
+# ------------------------------------------------- reject/retry requeue order
+class TestRequeueOrder:
+    def test_same_step_rejections_keep_staging_order(self):
+        """The regression: per-item insert(0) reversed same-step rejections;
+        the batch splice must preserve staging (FIFO) order."""
+        pending = [(7, "g"), (8, "h")]
+        staged = {0: (1, "a"), 1: (2, "b"), 2: (3, "c")}
+        sent_ok = {0: False, 1: False, 2: False}
+        n = _requeue_rejected(pending, staged, sent_ok)
+        assert n == 3
+        assert [rid for rid, _ in pending] == [1, 2, 3, 7, 8]
+
+    def test_partial_rejection_splices_only_rejects(self):
+        pending = []
+        staged = {0: (1, "a"), 1: (2, "b"), 2: (3, "c")}
+        sent_ok = {0: True, 1: False, 2: False}
+        assert _requeue_rejected(pending, staged, sent_ok) == 2
+        assert [rid for rid, _ in pending] == [2, 3]
+
+    def test_old_per_item_insert_would_reverse(self):
+        """Documents what the fix prevents (the old loop, inlined)."""
+        pending = []
+        staged = {0: (1, "a"), 1: (2, "b")}
+        for r, item in staged.items():           # dict order == staging order
+            pending.insert(0, item)              # the old bug
+        assert [rid for rid, _ in pending] == [2, 1]   # reversed!
