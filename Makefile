@@ -16,8 +16,9 @@ bench:
 
 # fast subset: message-rate bench + BENCH_rma_plan.json (eager vs coalesced
 # counts + modeled latency) + BENCH_serve_flow.json (reject/retry vs
-# credit-based enqueue counts, DESIGN.md §9) — seeds the perf trajectory
-# without the full run
+# credit-based enqueue, DESIGN.md §9) + BENCH_rmem.json (paged-KV prefix
+# savings, DESIGN.md §10), all folded into BENCH_trajectory.json (per-PR
+# series) — seeds the perf trajectory without the full run
 bench-smoke:
 	$(PYTHON) benchmarks/run.py --smoke
 

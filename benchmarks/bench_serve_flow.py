@@ -41,7 +41,8 @@ def run_engines(n: int) -> dict:
             "ring_rejects": int(eng.queue_stats()["dropped_by_me"].sum()),
             "msg_stats": {k: (int(v) if isinstance(v, (int, np.integer))
                               else float(v))
-                          for k, v in eng.msg_stats.items()},
+                          for k, v in eng.msg_stats.items()
+                          if isinstance(v, (int, float, np.integer, np.floating))},
         }
     return out
 

@@ -5,11 +5,14 @@ process keeps 1 CPU device).  Output: ``name,us_per_call,derived`` CSV.
 
 The harness also emits ``BENCH_rma_plan.json`` — eager vs coalesced message
 counts (traced through `OpCounter`) plus the §8 model's latency for both
-paths and the aggregation crossover — and ``BENCH_serve_flow.json`` —
+paths and the aggregation crossover — ``BENCH_serve_flow.json`` —
 reject/retry vs credit-based enqueue counts and modeled/measured message
-rates for the serving path (§9, written by `bench_serve_flow`).  ``--smoke``
-runs those emissions plus the message-rate bench (the `make bench-smoke`
-target).
+rates for the serving path (§9, written by `bench_serve_flow`) — and
+``BENCH_rmem.json`` — page-pool alloc throughput and the paged KV-cache's
+prefix-sharing bytes_wire savings (§10, written by `bench_rmem`).  Every
+run then folds ALL ``BENCH_*.json`` files into ``BENCH_trajectory.json``,
+one entry per commit — the per-PR perf series.  ``--smoke`` runs the JSON
+emissions plus the message-rate bench (the `make bench-smoke` target).
 """
 
 from __future__ import annotations
@@ -30,6 +33,7 @@ BENCHES = [
     ("benchmarks.bench_dsde", 8, "Fig 7b DSDE"),
     ("benchmarks.bench_rmaq", 8, "rmaq queues (DESIGN.md §6.8)"),
     ("benchmarks.bench_serve_flow", 8, "serve flow control (DESIGN.md §9)"),
+    ("benchmarks.bench_rmem", 8, "page pool + paged KV (DESIGN.md §10)"),
     ("benchmarks.bench_fft", 8, "Fig 7c 3D FFT"),
     ("benchmarks.bench_milc", 8, "Fig 8 MILC stencil"),
     ("benchmarks.bench_roofline", 1, "roofline from dry-run"),
@@ -39,6 +43,8 @@ SMOKE_BENCHES = [
     ("benchmarks.bench_message_rate", 4, "Fig 5b-c message rate (smoke)"),
     ("benchmarks.bench_serve_flow", 4, "serve flow control (smoke, "
                                        "emits BENCH_serve_flow.json)"),
+    ("benchmarks.bench_rmem", 4, "page pool + paged KV (smoke, "
+                                 "emits BENCH_rmem.json)"),
 ]
 
 
@@ -108,6 +114,51 @@ def emit_rma_plan_json(path: str = "BENCH_rma_plan.json", k: int = 32,
     return out
 
 
+def emit_trajectory(root: str, path: str = "BENCH_trajectory.json") -> dict:
+    """Aggregate every BENCH_*.json into one per-PR series file.
+
+    Each entry is (commit, benches); re-running on the same commit replaces
+    its entry instead of appending, so the series stays one point per PR —
+    the perf trajectory a future regression gate can diff against.
+    """
+    import glob
+
+    benches = {}
+    for f in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        name = os.path.splitext(os.path.basename(f))[0]
+        if name == "BENCH_trajectory":
+            continue
+        try:
+            with open(f) as fh:
+                benches[name] = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# trajectory: skipping {name}: {e}", flush=True)
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=root, timeout=30,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        commit = "unknown"
+
+    out_path = os.path.join(root, path)
+    series: list = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as fh:
+                series = json.load(fh).get("series", [])
+        except (OSError, json.JSONDecodeError):
+            series = []
+    series = [e for e in series if e.get("commit") != commit]
+    series.append({"commit": commit, "benches": benches})
+    out = {"series": series}
+    with open(out_path, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(f"# wrote {path}: {len(series)} commits x {len(benches)} bench files",
+          flush=True)
+    return out
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv[1:]
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -127,7 +178,9 @@ def main() -> None:
         sys.stdout.write(proc.stdout)
     emit_rma_plan_json(os.path.join(root, "BENCH_rma_plan.json"))
     if failures:
+        # do NOT fold stale JSON into the trajectory under this commit
         raise SystemExit(f"{failures} benchmarks failed")
+    emit_trajectory(root)
 
 
 if __name__ == "__main__":

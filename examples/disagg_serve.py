@@ -1,9 +1,12 @@
-"""Disaggregated prefill/decode serving over rmaq channels.
+"""Disaggregated prefill/decode serving with a paged remote KV-cache.
 
-Prefill ranks build KV-cache blocks and ship them as notified puts into the
-decode ranks' MPSC rings; decode ranks drain their ring and emit tokens.
+Paged mode (DESIGN.md §10): channel messages carry page-table entries —
+(owner, page id) int32 pairs — while KV page payloads are written directly
+into the decode ranks' rmem page pools.  Half the demo's requests share a
+50% prompt prefix, so their prefix pages resolve to pages already resident
+at the routed decoder: a refcount bump instead of a payload transfer.
 Every emitted token is checked against the single-host reference — the
-channel is load-bearing, not decorative.
+pool and the channel are load-bearing, not decorative.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/disagg_serve.py
@@ -16,53 +19,63 @@ import numpy as np
 from repro.serve.disagg import DisaggConfig, DisaggEngine
 
 
+def run(mesh, n: int, prompts: dict, paged: bool) -> tuple[dict, "DisaggEngine"]:
+    cfg = DisaggConfig(
+        n_prefill=max(1, n // 2), block_tokens=16, d_model=32,
+        queue_capacity=16, max_recv_per_step=4, n_lanes=2, flow=True,
+        paged=paged, page_tokens=4, novel_slots=2, pool_pages=48,
+    )
+    engine = DisaggEngine(mesh, "serve", cfg, seed=0)
+    for rid, toks in prompts.items():
+        engine.submit(rid, toks)
+    t0 = time.perf_counter()
+    results = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    mode = "paged" if paged else "inline"
+    print(f"[{mode}] served {len(results)} requests in {dt*1e3:.1f} ms "
+          f"({len(results)/dt:.0f} req/s); "
+          f"bytes_wire/req = "
+          f"{engine.msg_stats['bytes_wire_per_step'] * engine.steps_run / len(results):.0f}")
+    return results, engine
+
+
 def main() -> None:
     n = len(jax.devices())
     if n < 2:
         print("run with XLA_FLAGS=--xla_force_host_platform_device_count=4")
         return
     mesh = jax.make_mesh((n,), ("serve",))
-    cfg = DisaggConfig(
-        n_prefill=max(1, n // 2), block_tokens=16, d_model=32,
-        queue_capacity=16, max_recv_per_step=4, n_lanes=2, flow=True,
-    )
-    engine = DisaggEngine(mesh, "serve", cfg, seed=0)
-    print(f"mesh: {cfg.n_prefill} prefill + {n - cfg.n_prefill} decode ranks; "
-          f"{cfg.n_lanes} credit lanes/rank; "
-          f"KV block = [{cfg.block_tokens}, 2, {cfg.d_model}] f32 per request")
 
+    # shared-prefix workload: every request's first 8 of 16 tokens match
     rng = np.random.RandomState(7)
+    vocab, bt = 97, 16
+    prefix = rng.randint(0, vocab, size=bt // 2)
     n_requests = 12
-    prompts = {i: rng.randint(0, cfg.vocab, size=cfg.block_tokens)
+    prompts = {i: np.concatenate([prefix, rng.randint(0, vocab, size=bt // 2)])
                for i in range(n_requests)}
-    for rid, toks in prompts.items():
-        engine.submit(rid, toks)
 
-    t0 = time.perf_counter()
-    results = engine.run_until_drained()
-    dt = time.perf_counter() - t0
+    print(f"{n_requests} requests, 50% shared prompt prefix, "
+          f"mesh = {max(1, n//2)} prefill + {n - max(1, n//2)} decode ranks")
+    res_inline, eng_inline = run(mesh, n, prompts, paged=False)
+    res_paged, eng_paged = run(mesh, n, prompts, paged=True)
 
-    ok = sum(results[rid] == engine.reference(toks)
+    ok = sum(res_paged[rid] == eng_paged.reference(toks)
+             and res_inline[rid] == eng_paged.reference(toks)
              for rid, toks in prompts.items())
-    stats = engine.queue_stats()
-    kv_bytes = cfg.block_tokens * 2 * cfg.d_model * 4
-    shipped = int(stats["enqueued"].sum())
-    print(f"served {len(results)} requests in {dt*1e3:.1f} ms "
-          f"({len(results)/dt:.0f} req/s)")
-    fstats = engine.flow_stats()
-    print(f"KV blocks shipped over the channel: {shipped} "
-          f"({shipped * kv_bytes / 1024:.0f} KiB), "
-          f"notifications: {int(stats['notifications'].sum())}, "
-          f"send retries (backpressure): {engine.retries}, "
-          f"credit stalls: {engine.credit_stalls}")
-    if fstats:
-        cons = "OK" if fstats["conservation_ok"] else "BROKEN"
-        print(f"lane sends per decode rank: "
-              f"{fstats['lane_sends'][cfg.n_prefill:].tolist()}, "
-              f"credit conservation: {cons}")
-    print(f"decode == single-host reference: {ok}/{n_requests}")
-    for rid in sorted(results)[:4]:
-        print(f"  req {rid}: token {results[rid]}")
+    ps = eng_paged.paged_stats()
+    fs = eng_paged.flow_stats()
+    print(f"prefix hits: {ps['prefix_hits']} "
+          f"(hit rate {ps['prefix_hit_rate']:.2f}), "
+          f"novel pages shipped: {ps['novel_pages_shipped']}, "
+          f"payload bytes/req: {eng_inline.cfg.block_nbytes} (inline) -> "
+          f"{ps['effective_payload_bytes'] / n_requests:.0f} (paged)")
+    print(f"page-pool conservation: "
+          f"{'OK' if ps['pool_conservation_ok'] else 'BROKEN'}, "
+          f"credit conservation: {'OK' if fs['conservation_ok'] else 'BROKEN'}, "
+          f"retries: {eng_paged.retries}")
+    print(f"decode == single-host reference (both modes): {ok}/{n_requests}")
+    for rid in sorted(res_paged)[:4]:
+        print(f"  req {rid}: token {res_paged[rid]}")
     if ok != n_requests:
         raise SystemExit("MISMATCH between disaggregated and reference decode")
 

@@ -26,6 +26,30 @@ WRITER_BIT = 1 << 63
 GLOBAL_EXCL_UNIT = 1 << 32
 GLOBAL_SHRD_MASK = (1 << 32) - 1
 
+# Bounded busy-wait: with backoff doubling from 1µs and capping at 1ms, the
+# default bound spends ~30s before giving up — a protocol bug (e.g. a
+# refcount path that never releases its writer) fails loudly with held-state
+# diagnostics instead of hanging the tier-1 run forever.
+DEFAULT_MAX_RETRIES = 30_000
+
+
+class LockTimeout(RuntimeError):
+    """A lock acquisition exhausted its retry bound (likely deadlock)."""
+
+
+def _held_state(win: "LockWindow", target: int | None = None) -> str:
+    """Human-readable dump of the lock words for timeout diagnostics."""
+    m = win.master.v
+    parts = [f"master: excl={m >> 32}, lockall={m & GLOBAL_SHRD_MASK}"]
+    ranks = range(win.p) if target is None else [target]
+    for r in ranks:
+        v = win.local[r].v
+        parts.append(
+            f"local[{r}]: writer={bool(v & WRITER_BIT)}, "
+            f"readers={v & ~WRITER_BIT}"
+        )
+    return "; ".join(parts)
+
 
 class _AtomicWord:
     """A 64-bit word supporting the three DMAPP AMOs the paper needs."""
@@ -83,9 +107,14 @@ class LockOrigin:
         self.excl_held = 0  # nesting count of exclusive locks held
 
     # ------------------------------------------------------------- shared
-    def lock_shared(self, target: int, backoff: float = 1e-6) -> None:
-        """MPI_Win_lock(SHARED): one AMO if no writer (paper: P=2.7µs)."""
-        while True:
+    def lock_shared(self, target: int, backoff: float = 1e-6,
+                    max_retries: int = DEFAULT_MAX_RETRIES) -> None:
+        """MPI_Win_lock(SHARED): one AMO if no writer (paper: P=2.7µs).
+
+        Bounded busy-wait: raises `LockTimeout` (with the held lock words)
+        after `max_retries` failed attempts instead of spinning forever.
+        """
+        for _ in range(max_retries):
             old = self.win.local[target].fetch_add(1)
             if not (old & WRITER_BIT):
                 return  # acquired
@@ -93,14 +122,23 @@ class LockOrigin:
             self.win.local[target].fetch_add(-1)
             time.sleep(backoff)
             backoff = min(backoff * 2, 1e-3)
+        raise LockTimeout(
+            f"rank {self.rank}: lock_shared({target}) gave up after "
+            f"{max_retries} retries — {_held_state(self.win, target)}"
+        )
 
     def unlock_shared(self, target: int) -> None:
         self.win.local[target].fetch_add(-1)
 
     # ---------------------------------------------------------- exclusive
-    def lock_exclusive(self, target: int, backoff: float = 1e-6) -> None:
-        """Invariant 1: no global lockall; invariant 2: exclusive local CAS."""
-        while True:
+    def lock_exclusive(self, target: int, backoff: float = 1e-6,
+                       max_retries: int = DEFAULT_MAX_RETRIES) -> None:
+        """Invariant 1: no global lockall; invariant 2: exclusive local CAS.
+
+        Bounded busy-wait (both invariants share one retry budget): raises
+        `LockTimeout` with the held lock words instead of spinning forever.
+        """
+        for _ in range(max_retries):
             # Invariant 1 — register wish for exclusive lock at the master.
             if self.excl_held == 0:
                 old = self.win.master.fetch_add(GLOBAL_EXCL_UNIT)
@@ -120,6 +158,10 @@ class LockOrigin:
                 self.win.master.fetch_add(-GLOBAL_EXCL_UNIT)
             time.sleep(backoff)
             backoff = min(backoff * 2, 1e-3)
+        raise LockTimeout(
+            f"rank {self.rank}: lock_exclusive({target}) gave up after "
+            f"{max_retries} retries — {_held_state(self.win, target)}"
+        )
 
     def unlock_exclusive(self, target: int) -> None:
         self.win.local[target].fetch_add(-WRITER_BIT)
@@ -128,15 +170,23 @@ class LockOrigin:
             self.win.master.fetch_add(-GLOBAL_EXCL_UNIT)
 
     # -------------------------------------------------------------- lockall
-    def lock_all(self, backoff: float = 1e-6) -> None:
-        """MPI_Win_lock_all: global shared — one AMO if no exclusives."""
-        while True:
+    def lock_all(self, backoff: float = 1e-6,
+                 max_retries: int = DEFAULT_MAX_RETRIES) -> None:
+        """MPI_Win_lock_all: global shared — one AMO if no exclusives.
+
+        Bounded busy-wait: raises `LockTimeout` with the held lock words
+        after `max_retries` failed attempts."""
+        for _ in range(max_retries):
             old = self.win.master.fetch_add(1)
             if old < GLOBAL_EXCL_UNIT:  # no exclusive holders
                 return
             self.win.master.fetch_add(-1)
             time.sleep(backoff)
             backoff = min(backoff * 2, 1e-3)
+        raise LockTimeout(
+            f"rank {self.rank}: lock_all() gave up after {max_retries} "
+            f"retries — {_held_state(self.win)}"
+        )
 
     def unlock_all(self) -> None:
         self.win.master.fetch_add(-1)

@@ -297,6 +297,76 @@ class PerfModel:
                 return f
         return 1.0
 
+    # -- rmem: page allocation + paged KV transport (DESIGN.md §10) --------
+    def p_page_alloc(self, fused: bool = True, hops: int = 1) -> float:
+        """Marginal cost of one remote page allocation: the fetch-and-op on
+        the owner's free-list head word (injection-rate bound, like every
+        8-byte AMO) plus the owner-side stack pop (HBM-trivial).  Riding an
+        existing epoch's fused gather (`heap.alloc_record` on a shared
+        plan) makes the wire share free; standalone pays the counter get."""
+        amo = self.p_message_rate(8.0)
+        return amo if fused else amo + self.p_get(8.0, hops)
+
+    def p_paged_gather(self, n_pages: int, page_bytes: float,
+                       hops: int = 1) -> float:
+        """Fused remote gather of n scattered pages into one contiguous
+        block (`kernels.paged_gather`): one id-list message + one packed
+        reply + the owner-side pack copies — NOT n row round-trips."""
+        total = n_pages * page_bytes
+        pack = 2.0 * total / self.hw.hbm_bandwidth
+        return (self.p_put(8.0 * n_pages, hops)        # the id list
+                + self.p_put(total, hops) + pack)      # one packed reply
+
+    def p_append_inline(self, block_bytes: float, hops: int = 1) -> float:
+        """Inline-payload KV append: the whole block through the ring every
+        time, prefix reuse or not (the §9 credit enqueue cost)."""
+        return self.p_queue_enqueue(block_bytes, hops)
+
+    def p_append_paged(self, block_bytes: float, pages_per_block: int,
+                       reuse_fraction: float, hops: int = 1) -> float:
+        """Paged KV append at prefix-reuse fraction f: the page-TABLE
+        message through the ring (8 bytes/page), plus — only for the
+        (1-f) novel pages — one page put and one free-list AMO each.
+        Shared pages cost a refcount AMO only (it rides the table epoch).
+        """
+        f = min(max(reuse_fraction, 0.0), 1.0)
+        table_bytes = 8.0 * pages_per_block
+        page_bytes = block_bytes / pages_per_block
+        novel = (1.0 - f) * pages_per_block
+        return (self.p_queue_enqueue(table_bytes, hops)
+                + novel * (self.p_put(page_bytes, hops)
+                           + self.p_page_alloc(fused=True)))
+
+    def select_kv_transport(
+        self, block_bytes: float, pages_per_block: int,
+        reuse_fraction: float,
+    ) -> Literal["paged", "inline"]:
+        """§6-style dispatch rule for the serving path: page-id indirection
+        vs inline payload as a function of prefix reuse.  At f=0 paging
+        pays its table + per-page AMO overhead for nothing; every reused
+        page removes a page put from the wire, so past a (small) crossover
+        fraction the indirection wins — and the win grows linearly in f."""
+        paged = self.p_append_paged(block_bytes, pages_per_block, reuse_fraction)
+        inline = self.p_append_inline(block_bytes)
+        return "paged" if paged <= inline else "inline"
+
+    def paged_crossover_reuse(self, block_bytes: float,
+                              pages_per_block: int) -> float:
+        """Smallest prefix-reuse fraction (1% grid) where paged transport
+        beats inline — the modeled crossover `bench_rmem` documents.  1.0
+        when inline always wins (blocks too small to amortize the table)."""
+        for i in range(101):
+            f = i / 100.0
+            if self.select_kv_transport(block_bytes, pages_per_block, f) == "paged":
+                return f
+        return 1.0
+
+    def prefix_hit_bytes_saved(self, block_bytes: float,
+                               reuse_fraction: float) -> float:
+        """Payload bytes one request avoids on the wire at reuse f — the
+        production cache win the ROADMAP's serving goal banks on."""
+        return block_bytes * min(max(reuse_fraction, 0.0), 1.0)
+
     # -- model-guided strategy selection (paper §6 example) ----------------
     def select_dispatch(
         self,

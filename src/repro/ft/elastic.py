@@ -7,6 +7,16 @@ stay aligned); the data axis absorbs the loss — batch is re-split, the
 deterministic pipeline recomputes shard assignments from scratch (pure
 function of (seed, step, shard)), so not a single sample is skipped or
 duplicated across the restart.
+
+Serving-side elasticity (DESIGN.md §10.6): when a decode rank joins or
+leaves, the paged KV cache must move with it.  `migrate_kv_pages` /
+`expand_kv_pool` are the policy wrappers over `rmem.pages.PagedKVPool` —
+a leave re-homes every live page onto survivors (one RMA get + put per
+page, refcounts transferred verbatim, same-content pages merged), a join
+brings up an empty pool and adds the rank to the prefix-affinity routing
+set.  The conservation invariant (free + live == capacity per surviving
+rank) must hold before and after; `tests/test_rmem.py` regression-tests it
+next to `elastic_restore`'s no-sample-lost guarantee.
 """
 
 from __future__ import annotations
@@ -65,3 +75,24 @@ def elastic_restore(
     shardings = policy.tree_shardings(like_tree)
     tree, extra = ckpt.restore(like_tree, step=step, shardings=shardings)
     return tree, extra, mesh, policy
+
+
+# --------------------------------------------------- paged-KV elasticity
+def migrate_kv_pages(kv, leaving_rank: int) -> dict:
+    """Rank leave: re-home every live KV page of `leaving_rank` onto the
+    surviving owners, preserving refcounts and rewriting page tables and
+    the prefix index (`rmem.pages.PagedKVPool.migrate_from`).
+
+    Returns the migration report ({"moved", "merged", "mapping"}).  The
+    caller (or the test suite) asserts conservation afterwards: for every
+    survivor, free + live == capacity — no page lost, none duplicated.
+    """
+    return kv.migrate_from(leaving_rank)
+
+
+def expand_kv_pool(kv, joining_rank: int) -> None:
+    """Rank join: attach an empty page pool for `joining_rank` and add it
+    to the prefix-affinity routing set.  Existing pages stay where they
+    are (their index entries keep resolving); only NEW prefixes route to
+    the newcomer — no rebalancing storm on join."""
+    kv.add_owner(joining_rank)

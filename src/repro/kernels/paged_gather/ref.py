@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused paged gather (XLA-path semantics).
+
+Same contract as `kernel.paged_gather_pallas`, expressed over the §2.4
+eager ops: the id list is a put to the target (the page-table lookup), the
+target gathers its pool rows, and the packed block is a put back to the
+requester — two wire messages per epoch regardless of k, matching the
+kernel's fused reply.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rma
+
+
+def paged_gather_ref(pages: jax.Array, ids: jax.Array, shift: int,
+                     axis: str) -> jax.Array:
+    """pages [n_pages, *ps], ids [k] int32 → [k, *ps]: rows `ids` of rank
+    (me+shift)'s pool.  Out-of-range ids clamp to row 0 (callers mask)."""
+    n_pages = pages.shape[0]
+    # my ids land at my target; I receive the ids of rank me-shift
+    req_ids = rma.put_shift(ids, shift, axis)
+    rows = pages[jnp.clip(req_ids, 0, n_pages - 1)]      # pack (owner-local)
+    # the packed block flies back to the requester: put toward -shift
+    return rma.put_shift(rows, -shift, axis)

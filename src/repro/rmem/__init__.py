@@ -1,0 +1,20 @@
+"""repro.rmem: symmetric-heap remote page pool + paged remote KV-cache.
+
+The paper treats MPI-3 windows as a true global address space: dynamic
+windows grow/shrink registered memory on the fly (§2.2) and scalable
+fetch-and-op/CAS protocols arbitrate shared structures without messages
+(§2.3-2.4).  This package reproduces the allocation layer real RMA codes
+are missing (Schuchart et al., "Quo Vadis MPI RMA?") as a remote free-list
+allocator built from one-sided atomics (Taranov et al.), and builds the
+serving stack's paged remote KV-cache on top of it.  See DESIGN.md §10.
+
+  * `heap`  — per-rank remote free-list page allocator over a dynamic RMA
+    window: CAS/fetch-and-op arbitration with wrap-safe uint32 generation
+    tags (ABA defense), alloc/free/release epochs recorded as `RmaPlan`
+    ops, grow/shrink with descriptor-cache invalidation.
+  * `pages` — `PagedKV`: fixed-size token pages owned by decode ranks,
+    hash-keyed prefix sharing with refcounted pages, page-table entries as
+    the wire format, elastic page migration.
+"""
+
+from . import heap, pages  # noqa: F401

@@ -107,3 +107,62 @@ except DrainError as e:
     print(f"PASS drain timeout raises: {len(e.undrained)} undrained ids reported")
 else:
     raise AssertionError("run_until_drained returned despite max_steps=1")
+
+# ---- paged mode (DESIGN.md §10): page-table messages, shared prefixes ----
+# half the prompt is a shared prefix, so every request after the first at a
+# given decoder resolves its prefix pages to already-resident ones: refcount
+# bumps instead of payload transfers, at the same 2 transfers per append.
+cfg6 = DisaggConfig(n_prefill=n // 2, block_tokens=8, d_model=16, vocab=61,
+                    queue_capacity=8, max_recv_per_step=2, n_lanes=2,
+                    flow=True, paged=True, page_tokens=2, novel_slots=2,
+                    pool_pages=32)
+eng6 = DisaggEngine(mesh, "serve", cfg6, seed=3)
+# append (reserve + payload plans) stays 2 fused transfers; the novel-page
+# scatter is the separate, prefix-shrinkable transfer in front of it
+plans6 = eng6.msg_stats["plans"]
+assert eng6.msg_stats["wire_msgs_per_step"] == 3, eng6.msg_stats
+assert sum(p["coalesced"] for p in plans6[1:]) == 2, plans6
+
+rng6 = np.random.RandomState(4)
+prefix = rng6.randint(0, cfg6.vocab, size=cfg6.block_tokens // 2)
+prompts6 = {rid: np.concatenate(
+    [prefix, rng6.randint(0, cfg6.vocab, size=cfg6.block_tokens // 2)])
+    for rid in range(9)}
+for rid, toks in prompts6.items():
+    eng6.submit(rid, toks)
+res6 = eng6.run_until_drained()
+assert len(res6) == len(prompts6)
+for rid, toks in prompts6.items():
+    assert res6[rid] == eng6.reference(toks), rid
+ps6 = eng6.paged_stats()
+assert ps6["prefix_hits"] > 0, ps6            # sharing actually happened
+assert ps6["pool_conservation_ok"], ps6       # free + live == capacity
+assert eng6.retries == 0 and eng6.queue_stats()["dropped_by_me"].sum() == 0
+assert eng6.flow_stats()["conservation_ok"]
+# prefix sharing moved fewer payload bytes than inline would have
+inline_payload = len(res6) * cfg6.block_nbytes
+assert ps6["effective_payload_bytes"] < inline_payload, ps6
+# all pages released after drain: pools completely free again
+assert all(c["live"] == 0
+           for c in eng6.kv.conservation()["per_owner"].values())
+print(f"PASS disagg paged: {len(res6)} tokens == reference; "
+      f"hits={ps6['prefix_hits']} (rate {ps6['prefix_hit_rate']:.2f}); "
+      f"payload bytes {inline_payload} -> {ps6['effective_payload_bytes']}; "
+      f"conservation OK")
+
+# ---- paged backpressure: tiny pool forces pool_stalls, never deadlock ----
+cfg7 = DisaggConfig(n_prefill=n // 2, block_tokens=8, d_model=16, vocab=61,
+                    queue_capacity=8, max_recv_per_step=2, n_lanes=1,
+                    flow=True, paged=True, page_tokens=2, novel_slots=1,
+                    pool_pages=4)   # one block's worth: forces pool stalls
+eng7 = DisaggEngine(mesh, "serve", cfg7, seed=3)
+for rid, toks in prompts6.items():
+    eng7.submit(rid, toks)
+res7 = eng7.run_until_drained()
+assert len(res7) == len(prompts6)
+for rid, toks in prompts6.items():
+    assert res7[rid] == eng7.reference(toks), rid
+assert eng7.paged_stats()["pool_conservation_ok"]
+assert eng7.pool_stalls > 0          # the pool went dry and requests waited
+print(f"PASS disagg paged backpressure: pool_stalls={eng7.pool_stalls}, "
+      f"all served through a 4-page pool")

@@ -33,3 +33,7 @@ def test_deferred_plan_substrate():
 
 def test_credit_flow_control():
     run_subtest("flow_sub.py", devices=8)
+
+
+def test_rmem_page_pool():
+    run_subtest("rmem_sub.py", devices=8)

@@ -1,0 +1,383 @@
+"""rmem tests (DESIGN.md §10): the CAS/ABA free-list protocol under real
+concurrency, dynamic-window descriptor invalidation across heap
+grow/shrink, prefix-sharing refcounts, elastic page migration, the §10
+transport model, and the bounded-lock (`LockTimeout`) satellite.
+"""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import locks_sim, window
+from repro.core.perfmodel import DEFAULT_MODEL
+from repro.ft import elastic
+from repro.rmem import heap, pages
+
+
+def _mesh():
+    return jax.make_mesh((1,), ("w",))
+
+
+# ------------------------------------------------------- host CAS free-list
+class TestHostPagePool:
+    def test_alloc_unique_and_conservation(self):
+        pool = heap.HostPagePool(8)
+        got = [pool.alloc() for _ in range(8)]
+        assert sorted(got) == list(range(8))
+        assert pool.alloc() is None                  # dry, not corrupted
+        cons = pool.conservation()
+        assert cons["free_plus_live"] == cons["capacity"] == 8
+        for pid in got:
+            pool.release(pid)
+        assert pool.conservation()["free"] == 8
+
+    def test_refcount_release_frees_at_zero(self):
+        pool = heap.HostPagePool(4)
+        pid = pool.alloc()
+        pool.ref_add(pid, 1)                         # shared: refcount 2
+        assert pool.release(pid) is False            # still live
+        assert pool.live_count() == 1
+        assert pool.release(pid) is True             # 1 -> 0 frees
+        assert pool.conservation()["free"] == 4
+
+    def test_double_release_and_dead_share_raise(self):
+        pool = heap.HostPagePool(4)
+        pid = pool.alloc()
+        pool.release(pid)
+        with pytest.raises(heap.HeapError):
+            pool.release(pid)
+        with pytest.raises(heap.HeapError):
+            pool.ref_add(pid, 1)                     # sharing a dead page
+        assert pool.conservation()["free"] == 4      # guards did not corrupt
+
+    def test_aba_stale_cas_defeated_by_generation(self):
+        """The classic interleaving: head A→B observed, A popped, B popped,
+        A pushed back.  A genless CAS (same head index) would succeed and
+        resurrect B onto the free list while B is live; the generation in
+        the packed word makes the stale CAS fail."""
+        pool = heap.HostPagePool(4)
+        stale = pool.head.read()                     # head word: (gen, A)
+        _, head_idx = heap.head_unpack(stale)
+        a = pool.alloc()
+        b = pool.alloc()
+        assert a == head_idx
+        pool.release(a)                              # A back at the head
+        _, now_idx = heap.head_unpack(pool.head.v)
+        assert now_idx == a                          # same INDEX as `stale`...
+        forged = heap.head_pack(0, int(pool.next[a]))
+        assert pool.head.cas(stale, forged) != stale  # ...but the CAS fails
+        assert pool.ref[b].v == 1                    # B stayed live
+        cons = pool.conservation()
+        assert cons["free_plus_live"] == cons["capacity"]
+
+    def test_aba_page_tag_invalidated_by_realloc(self):
+        pool = heap.HostPagePool(4)
+        pid = pool.alloc()
+        tag = pool.tag(pid)
+        assert pool.tag_valid(pid, tag)
+        pool.release(pid)
+        assert not pool.tag_valid(pid, tag)          # free bumped the tag
+        again = pool.alloc()
+        while again != pid:                          # cycle until id reuse
+            again = pool.alloc()
+        assert not pool.tag_valid(pid, tag)          # realloc'd: still stale
+
+    def test_threaded_alloc_free_conservation(self):
+        """Real concurrency on the CAS list: no double-allocation, no lost
+        page, conservation exact after every thread quiesces."""
+        pool = heap.HostPagePool(32)
+        errs, held_all = [], []
+
+        def worker(seed):
+            rng = np.random.RandomState(seed)
+            held = []
+            try:
+                for _ in range(300):
+                    if held and rng.rand() < 0.5:
+                        pool.release(held.pop())
+                    else:
+                        pid = pool.alloc()
+                        if pid is not None:
+                            held.append(pid)
+                held_all.append(held)
+            except Exception as e:  # pragma: no cover - failure surface
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(s,)) for s in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs, errs
+        held = [pid for h in held_all for pid in h]
+        assert len(held) == len(set(held))           # never double-allocated
+        cons = pool.conservation()
+        assert cons["free_plus_live"] == cons["capacity"]
+        assert cons["live"] == len(held)
+
+
+# ------------------------------------- dynamic window: grow/shrink + caches
+class TestPoolDynamicWindow:
+    def test_grow_invalidates_remote_descriptor_caches(self):
+        """attach → alloc → detach → realloc must not serve stale
+        descriptors: every grow/shrink bumps attach_id, forcing the §2.2
+        cache protocol to refetch."""
+        mesh = _mesh()
+        desc, state = heap.pool_allocate(mesh, "w", 8, (2,))
+        cache = window.DescriptorCache()
+        shape0 = cache.lookup(desc.window, desc.regions[0])[1]
+        assert shape0 == (8, 2)
+        ops_warm = cache.remote_ops
+        cache.lookup(desc.window, desc.regions[0])   # warm: O(1)
+        assert cache.remote_ops == ops_warm + 1
+
+        desc2, state2 = heap.pool_grow(mesh, desc, state, extra=8)
+        # stale region id: the cache must refetch and then refuse it
+        with pytest.raises(window.WindowError):
+            cache.lookup(desc2.window, desc.regions[0])
+        shape1 = cache.lookup(desc2.window, desc2.regions[0])[1]
+        assert shape1 == (16, 2)                     # the realloc'd region
+
+        desc3, _ = heap.pool_shrink(mesh, desc2, state2, remove=8)
+        with pytest.raises(window.WindowError):
+            cache.lookup(desc3.window, desc2.regions[0])
+        assert cache.lookup(desc3.window, desc3.regions[0])[1] == (8, 2)
+
+    def test_grow_preserves_state_and_conservation(self):
+        mesh = _mesh()
+        desc, state = heap.pool_allocate(mesh, "w", 4, (2,))
+        # mark page 1 live host-side (what an alloc epoch would do)
+        meta = np.asarray(state.meta).copy()
+        meta[0, 1, heap.REF] = 1
+        stack = np.asarray(state.free_stack).copy()
+        stack[0] = [0, 2, 3, 1]
+        head = np.asarray(state.head).copy()
+        head[0, heap.FREE_TOP] = 3
+        state = heap.PoolState(state.pages, meta, stack, head)
+        desc2, state2 = heap.pool_grow(mesh, desc, state, extra=4)
+        cons = heap.conservation(desc2, state2)
+        assert (cons["free_plus_live"] == 8).all()
+        assert cons["stack_consistent"].all()
+        assert desc2.n_pages == 8
+
+    def test_shrink_refuses_live_high_pages(self):
+        mesh = _mesh()
+        desc, state = heap.pool_allocate(mesh, "w", 4, ())
+        meta = np.asarray(state.meta).copy()
+        meta[0, 3, heap.REF] = 2                     # highest page live
+        state = heap.PoolState(state.pages, meta, state.free_stack, state.head)
+        with pytest.raises(heap.HeapError):
+            heap.pool_shrink(mesh, desc, state, remove=2)
+
+    def test_metadata_o1(self):
+        mesh = _mesh()
+        d1, _ = heap.pool_allocate(mesh, "w", 4, (2,))
+        d2, _ = heap.pool_allocate(mesh, "w", 512, (64,))
+        assert d1.metadata_nbytes() == d2.metadata_nbytes()
+
+
+# -------------------------------------------------- prefix sharing (PagedKV)
+class TestPagedKVPool:
+    def test_prefix_hit_shares_and_release_frees(self):
+        kv = pages.PagedKVPool(owners=[2, 3], n_pages=8, page_words=4)
+        key_a, key_b = b"prefix", b"tail-1"
+        dest = kv.route(key_a)
+        ref_a, shared = kv.acquire(dest, key_a)
+        assert not shared
+        ref_a2, shared2 = kv.acquire(dest, key_a)
+        assert shared2 and ref_a2 == ref_a           # same page, refcount 2
+        ref_b, _ = kv.acquire(dest, key_b)
+        kv.table_set(1, [ref_a, ref_b])
+        kv.table_set(2, [ref_a2])
+        assert kv.stats()["hits"] == 1
+
+        freed = kv.table_release(1)                  # a stays live via req 2
+        assert [r.page_id for r in freed] == [ref_b.page_id]
+        assert kv.table_release(2) == [ref_a]        # last ref frees
+        cons = kv.conservation()
+        assert cons["ok"]
+        assert all(c["live"] == 0 for c in cons["per_owner"].values())
+        assert (dest, key_a) not in kv.index         # index entry retired
+
+    def test_routing_is_consistent_per_key(self):
+        kv = pages.PagedKVPool(owners=[4, 5, 6], n_pages=4, page_words=1)
+        for key in (b"a", b"bb", b"ccc"):
+            assert kv.route(key) == kv.route(key)
+            assert kv.route(key) in kv.owners
+
+    def test_rendezvous_routing_stable_under_join_and_leave(self):
+        """The §10.6 join/leave contract: adding an owner only reroutes the
+        keys that move TO it (everything else keeps resolving in place),
+        and removing one only reroutes ITS keys — modulo hashing would
+        reshuffle nearly every key and destroy the prefix index."""
+        keys = [f"key-{i}".encode() for i in range(200)]
+        before = {k: pages.route_owner(k, [2, 3]) for k in keys}
+        after_join = {k: pages.route_owner(k, [2, 3, 4]) for k in keys}
+        assert all(after_join[k] in (before[k], 4) for k in keys)
+        assert any(after_join[k] == 4 for k in keys)     # newcomer gets load
+        after_leave = {k: pages.route_owner(k, [3, 4]) for k in keys}
+        assert all(after_leave[k] == after_join[k] for k in keys
+                   if after_join[k] != 2)                # survivors unmoved
+
+    def test_dry_pool_returns_none(self):
+        kv = pages.PagedKVPool(owners=[1], n_pages=1, page_words=1)
+        ref, _ = kv.acquire(1, b"x")
+        assert kv.acquire(1, b"y") is None
+        assert kv.stats()["dry"] == 1
+        kv.release_ref(ref)
+        assert kv.acquire(1, b"y") is not None
+
+
+# ------------------------------------------------- elastic page migration
+class TestElasticMigration:
+    def _loaded_kv(self):
+        """Pages pinned per owner so the leaver (rank 2) holds live pages:
+        p0 (shared by requests 1 and 2) and p1 on rank 2, p2 on rank 3."""
+        kv = pages.PagedKVPool(owners=[2, 3], n_pages=8, page_words=4)
+        owner_of = {b"p0": 2, b"p1": 2, b"p2": 3}
+        refs = {}
+        for rid, keys in {1: [b"p0", b"p1"], 2: [b"p0", b"p2"]}.items():
+            table = []
+            for key in keys:
+                ref, _ = kv.acquire(owner_of[key], key)
+                kv.pools[ref.owner].pages[ref.page_id] = hash(key) % 97
+                table.append(ref)
+                refs[key] = ref
+            kv.table_set(rid, table)
+        return kv, refs
+
+    def test_rank_leave_preserves_pages_and_refcounts(self):
+        """The satellite regression: after a simulated rank-leave, every
+        live page and its refcount survive, and per-rank free + live ==
+        capacity — asserted like flow's credit conservation."""
+        kv, refs = self._loaded_kv()
+        before = {
+            key: (kv.pools[r.owner].ref[r.page_id].v,
+                  kv.pools[r.owner].pages[r.page_id].copy())
+            for key, r in refs.items()
+        }
+        total_live = sum(p.live_count() for p in kv.pools.values())
+        leaving_live = kv.pools[2].live_count()
+        assert leaving_live == 2                     # p0 + p1 live on rank 2
+
+        report = elastic.migrate_kv_pages(kv, leaving_rank=2)
+        assert kv.owners == [3]
+        cons = kv.conservation()
+        assert cons["ok"], cons
+        assert kv.pools[3].live_count() == total_live  # no page lost
+        for key, (rc, payload) in before.items():
+            nref = kv.index[(3, key)]
+            assert nref.owner == 3
+            assert kv.pools[3].ref[nref.page_id].v == rc      # refcount kept
+            np.testing.assert_array_equal(
+                kv.pools[3].pages[nref.page_id], payload)     # content kept
+        # page tables rewritten: no entry references the leaver
+        for refs_t in kv.page_tables.values():
+            assert all(r.owner == 3 for r in refs_t)
+        assert report["moved"] + report["merged"] == leaving_live
+        # full unwind still conserves
+        kv.table_release(1)
+        kv.table_release(2)
+        assert kv.conservation()["ok"]
+        assert kv.pools[3].live_count() == 0
+
+    def test_migration_merges_duplicate_content(self):
+        """A key stored on BOTH ranks (routed copies diverge only by owner)
+        merges on migration: one page, summed refcount."""
+        kv = pages.PagedKVPool(owners=[2, 3], n_pages=4, page_words=1)
+        ra, _ = kv.acquire(2, b"dup")
+        rb, _ = kv.acquire(3, b"dup")
+        kv.pools[2].ref_add(ra.page_id, 2)           # refcount 3 on rank 2
+        report = elastic.migrate_kv_pages(kv, leaving_rank=2)
+        if kv.index[(3, b"dup")] == rb:              # merged into rank 3's page
+            assert report["merged"] == 1
+            assert kv.pools[3].ref[rb.page_id].v == 4
+        cons = kv.conservation()
+        assert cons["ok"]
+
+    def test_rank_join_expands_routing(self):
+        kv = pages.PagedKVPool(owners=[2], n_pages=4, page_words=1)
+        ref, _ = kv.acquire(2, b"old")
+        elastic.expand_kv_pool(kv, joining_rank=9)
+        assert kv.owners == [2, 9]
+        assert kv.conservation()["ok"]
+        assert kv.index[(2, b"old")] == ref          # existing pages stay put
+        with pytest.raises(heap.HeapError):
+            elastic.expand_kv_pool(kv, joining_rank=9)
+
+    def test_last_owner_cannot_leave(self):
+        kv = pages.PagedKVPool(owners=[2], n_pages=4, page_words=1)
+        with pytest.raises(heap.HeapError):
+            elastic.migrate_kv_pages(kv, leaving_rank=2)
+
+
+# ----------------------------------------------------------- §10 perf model
+class TestPagedTransportModel:
+    def test_inline_wins_without_reuse(self):
+        m = DEFAULT_MODEL
+        assert m.select_kv_transport(4096.0, 4, 0.0) == "inline"
+
+    def test_paged_wins_at_full_reuse(self):
+        m = DEFAULT_MODEL
+        assert m.select_kv_transport(4096.0, 4, 1.0) == "paged"
+
+    def test_paged_cost_monotone_in_reuse(self):
+        m = DEFAULT_MODEL
+        costs = [m.p_append_paged(2**21, 16, f / 10) for f in range(11)]
+        assert all(a >= b for a, b in zip(costs, costs[1:]))
+
+    def test_production_block_crossover_below_half(self):
+        """2 MB KV blocks cross before f=0.5: a >=50%-shared-prefix
+        workload is decisively paged territory (the ISSUE workload)."""
+        m = DEFAULT_MODEL
+        f = m.paged_crossover_reuse(2048 * 2 * 128 * 4.0, 16)
+        assert 0.0 < f < 0.5
+        assert m.prefix_hit_bytes_saved(2**21, 0.5) == 2**20
+
+    def test_fused_alloc_cheaper_than_standalone(self):
+        m = DEFAULT_MODEL
+        assert m.p_page_alloc(True) < m.p_page_alloc(False)
+
+
+# ------------------------------------------------- bounded lock busy-waits
+class TestLockTimeout:
+    def test_lock_shared_times_out_with_diagnostics(self):
+        win = locks_sim.LockWindow(p=2)
+        a = locks_sim.LockOrigin(win, 0)
+        b = locks_sim.LockOrigin(win, 1)
+        a.lock_exclusive(1)
+        with pytest.raises(locks_sim.LockTimeout) as ei:
+            b.lock_shared(1, max_retries=3)
+        assert "writer=True" in str(ei.value)        # held-state diagnostics
+        assert "lock_shared(1)" in str(ei.value)
+        a.unlock_exclusive(1)
+        b.lock_shared(1, max_retries=3)              # now succeeds
+        b.unlock_shared(1)
+
+    def test_lock_exclusive_times_out_and_rolls_back(self):
+        win = locks_sim.LockWindow(p=2)
+        a = locks_sim.LockOrigin(win, 0)
+        b = locks_sim.LockOrigin(win, 1)
+        a.lock_all()
+        with pytest.raises(locks_sim.LockTimeout) as ei:
+            b.lock_exclusive(0, max_retries=3)
+        assert "lockall=1" in str(ei.value)
+        # the failed acquire left no stale global registration behind
+        assert win.master.read() == 1
+        a.unlock_all()
+        b.lock_exclusive(0, max_retries=3)
+        b.unlock_exclusive(0)
+        assert win.master.read() == 0
+
+    def test_lock_all_times_out_under_writer(self):
+        win = locks_sim.LockWindow(p=2)
+        a = locks_sim.LockOrigin(win, 0)
+        b = locks_sim.LockOrigin(win, 1)
+        a.lock_exclusive(0)
+        with pytest.raises(locks_sim.LockTimeout) as ei:
+            b.lock_all(max_retries=3)
+        assert "excl=1" in str(ei.value)
+        a.unlock_exclusive(0)
+        assert win.master.read() == 0
