@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-smoke lint example-disagg
+.PHONY: test test-fast bench bench-smoke sim-smoke sim-chaos lint example-disagg
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -19,8 +19,27 @@ bench:
 # credit-based enqueue, DESIGN.md §9) + BENCH_rmem.json (paged-KV prefix
 # savings, DESIGN.md §10), all folded into BENCH_trajectory.json (per-PR
 # series) — seeds the perf trajectory without the full run
-bench-smoke:
+bench-smoke: sim-smoke
 	$(PYTHON) benchmarks/run.py --smoke
+
+# 3-seed 64-rank conformance subset on the simulated fabric (DESIGN.md §11):
+# every protocol under reorder/delay/duplicate chaos, invariants checked
+# every step, plus the fault-injection check (tear MUST be caught)
+sim-smoke:
+	$(PYTHON) -m repro.sim.conformance --smoke
+	$(PYTHON) -m repro.sim.conformance --ranks 64 --schedules tear \
+		--protocols queue,epoch --seeds 0 --expect-fail
+
+# the nightly sweep: 256 ranks, many seeds (override SEED_BASE/SWEEP in CI)
+SEED_BASE ?= 0
+SWEEP ?= 10
+sim-chaos:
+	$(PYTHON) -m repro.sim.conformance --ranks 256 --sweep $(SWEEP) \
+		--seed-base $(SEED_BASE) \
+		--protocols queue,flow,heap,epoch,lock,kv
+	$(PYTHON) -m repro.sim.conformance --ranks 256 --schedules tear \
+		--protocols queue,epoch --sweep $(SWEEP) --seed-base $(SEED_BASE) \
+		--expect-fail
 
 lint:
 	ruff check src tests benchmarks examples

@@ -83,6 +83,14 @@ class SyncStats:
     def __exit__(self, *exc) -> None:
         SyncStats._ACTIVE.remove(self)
 
+    def snapshot(self) -> dict:
+        """Fingerprint of every sync counter (fabric diff tests compare
+        these byte-for-byte against golden traces)."""
+        return {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+        }
+
     @classmethod
     def record(cls, field: str, n: int = 1,
                also: Optional["SyncStats"] = None) -> None:

@@ -38,16 +38,21 @@ class LockTimeout(RuntimeError):
 
 
 def _held_state(win: "LockWindow", target: int | None = None) -> str:
-    """Human-readable dump of the lock words for timeout diagnostics."""
+    """Human-readable dump of the lock words for timeout diagnostics —
+    including WHICH rank holds a writer lock, so a deadlock report points
+    at the offender instead of just the contended word."""
     m = win.master.v
     parts = [f"master: excl={m >> 32}, lockall={m & GLOBAL_SHRD_MASK}"]
     ranks = range(win.p) if target is None else [target]
     for r in ranks:
         v = win.local[r].v
-        parts.append(
-            f"local[{r}]: writer={bool(v & WRITER_BIT)}, "
-            f"readers={v & ~WRITER_BIT}"
-        )
+        fields = [f"writer={bool(v & WRITER_BIT)}"]
+        if v & WRITER_BIT:
+            holder = win.holder[r]
+            fields.append(f"held_by=rank {holder}" if holder >= 0
+                          else "held_by=?")
+        fields.append(f"readers={v & ~WRITER_BIT}")
+        parts.append(f"local[{r}]: " + ", ".join(fields))
     return "; ".join(parts)
 
 
@@ -89,9 +94,12 @@ class LockWindow:
     p: int
     master: _AtomicWord = field(default_factory=_AtomicWord)
     local: list = field(default_factory=list)
+    holder: list = field(default_factory=list)   # rank holding each writer bit
 
     def __post_init__(self) -> None:
         self.local = [_AtomicWord() for _ in range(self.p)]
+        # diagnostic only (written by the winner, read on timeout): -1 = free
+        self.holder = [-1] * self.p
 
     @property
     def total_amos(self) -> int:
@@ -151,6 +159,7 @@ class LockOrigin:
             # Invariant 2 — CAS the local lock from 0 to writer.
             old = self.win.local[target].cas(0, WRITER_BIT)
             if old == 0:
+                self.win.holder[target] = self.rank   # diagnostics (§ timeout)
                 self.excl_held += 1
                 return
             # failed: release global registration and retry both invariants
@@ -164,6 +173,7 @@ class LockOrigin:
         )
 
     def unlock_exclusive(self, target: int) -> None:
+        self.win.holder[target] = -1
         self.win.local[target].fetch_add(-WRITER_BIT)
         self.excl_held -= 1
         if self.excl_held == 0:

@@ -250,6 +250,19 @@ class OpCounter:
     def aggregation_factor(self) -> float:
         return self.raw_msgs / self.coalesced_msgs if self.coalesced_msgs else 1.0
 
+    def snapshot(self) -> dict:
+        """Order-independent fingerprint of every counter — the unit the
+        fabric diff tests compare byte-for-byte against golden traces."""
+        return {
+            "puts": self.puts,
+            "gets": self.gets,
+            "accs": self.accs,
+            "colls": self.colls,
+            "raw_msgs": self.raw_msgs,
+            "coalesced_msgs": self.coalesced_msgs,
+            "by_axis": {a: dict(sorted(k.items())) for a, k in sorted(self.by_axis.items())},
+        }
+
     @classmethod
     def record(cls, kind: str, n: int = 1, axis: str | None = None) -> None:
         """Eager-path record: one logical op == one wire transfer."""

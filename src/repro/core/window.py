@@ -104,16 +104,25 @@ class DescriptorCache:
     operations so tests can check the O(1)-amortized claim.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, fabric=None) -> None:
         self.cached_id: int = -1
         self.descriptors: dict = {}
         self.remote_ops: int = 0  # instrumentation
+        # optional host transport (core.fabric): when attached, the control
+        # reads are ALSO charged to the fabric's op ledger so simulated runs
+        # see the descriptor-refetch traffic next to the payload traffic
+        self.fabric = fabric
+
+    def _charge(self, n: int) -> None:
+        self.remote_ops += n
+        if self.fabric is not None:
+            self.fabric._count("gets", n)
 
     def lookup(self, target: Window, rid: int):
-        self.remote_ops += 1  # get(attach_id)
+        self._charge(1)  # get(attach_id)
         if self.cached_id != target.attach_id:
             # cache invalid: refetch the whole remote list
-            self.remote_ops += max(1, len(target.regions))
+            self._charge(max(1, len(target.regions)))
             self.descriptors = dict(target.regions)
             self.cached_id = target.attach_id
         if rid not in self.descriptors:

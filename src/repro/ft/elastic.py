@@ -96,3 +96,29 @@ def expand_kv_pool(kv, joining_rank: int) -> None:
     are (their index entries keep resolving); only NEW prefixes route to
     the newcomer — no rebalancing storm on join."""
     kv.add_owner(joining_rank)
+
+
+def kv_membership_change(kv, leave: Optional[int] = None,
+                         join: Optional[int] = None) -> dict:
+    """One mid-epoch membership event: a leave (live pages re-homed), a
+    join (empty pool attached), or both, with conservation checked before
+    and after — the policy entry point `repro.sim.conformance` drives when
+    it kills or adds a rank in the middle of a chaos schedule.
+
+    Returns ``{"before": ..., "after": ..., "migration": ...}``; raises
+    RuntimeError if either conservation check fails (a membership change
+    must never lose or duplicate a page).
+    """
+    before = kv.conservation()
+    if not before["ok"]:
+        raise RuntimeError(f"pool conservation broken BEFORE membership change: {before}")
+    report = {"before": before, "migration": None}
+    if leave is not None:
+        report["migration"] = migrate_kv_pages(kv, leave)
+    if join is not None:
+        expand_kv_pool(kv, join)
+    after = kv.conservation()
+    if not after["ok"]:
+        raise RuntimeError(f"pool conservation broken AFTER membership change: {after}")
+    report["after"] = after
+    return report

@@ -214,9 +214,17 @@ def channel_allocate(
 # --------------------------------------------------------------- host mirror
 class HostChannel:
     """Host-side channel over `HostQueueGroup` — same header layout, same
-    admission protocol; used by control-plane components (ft.heartbeat)."""
+    admission protocol; used by control-plane components (ft.heartbeat).
 
-    def __init__(self, p: int, capacity: int, lanes: Sequence[Lane]):
+    `fabric` (a `core.fabric.Fabric`) is threaded through to the queue
+    group: the default in-process transport keeps today's semantics, the
+    sim transport runs the same protocol under chaos schedules.  `name`
+    namespaces this channel's fabric regions — give each channel sharing
+    one fabric a distinct name (the default suits one channel per fabric).
+    """
+
+    def __init__(self, p: int, capacity: int, lanes: Sequence[Lane], fabric=None,
+                 name: str = "q"):
         self.lanes = tuple(Lane(l.name, tuple(l.shape), np.dtype(l.dtype)) for l in lanes)
         for lane in self.lanes:
             if np.dtype(lane.dtype).itemsize != 4:
@@ -224,7 +232,8 @@ class HostChannel:
         self.payload_words = max(
             (int(np.prod(l.shape)) if l.shape else 1) for l in self.lanes
         )
-        self.group = rq.HostQueueGroup(p, capacity, HDR + self.payload_words, np.float32)
+        self.group = rq.HostQueueGroup(p, capacity, HDR + self.payload_words,
+                                       np.float32, fabric=fabric, name=name)
         self._pending: dict[int, list[tuple[int, np.ndarray]]] = {}
 
     def _lane_id(self, name: str) -> int:

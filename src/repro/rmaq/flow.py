@@ -319,8 +319,11 @@ class HostFlowChannel:
     """
 
     def __init__(self, p: int, capacity: int, lanes: Sequence[rch.Lane],
-                 n_producers: Optional[int] = None):
-        self.ch = rch.HostChannel(p, capacity, lanes)
+                 n_producers: Optional[int] = None, fabric=None,
+                 name: str = "q"):
+        self.ch = rch.HostChannel(p, capacity, lanes, fabric=fabric, name=name)
+        self.fabric = self.ch.group.fabric
+        self._granted_region = f"{name}.granted"
         self.p = p
         self.L = len(self.ch.lanes)
         self.capacity = capacity
@@ -328,6 +331,10 @@ class HostFlowChannel:
         self.granted = np.tile(g[None], (p, 1, 1))          # [owner, prod, L]
         self.limit = np.tile(g[:, None, :], (1, p, 1))      # [prod, target, L]
         self.sent = np.zeros((p, p, self.L), np.uint64)     # [prod, target, L]
+        # the published grant blocks live in the queue window (§9): remote
+        # refreshes read them through the fabric; owner-side grant returns
+        # stay direct (drain + grant move in lockstep, owner-locally)
+        self.fabric.register(self._granted_region, self.granted)
         self.refreshes = 0
         self.deferred = 0
         self.rejected = 0   # ring-admission rejections: must stay 0
@@ -338,8 +345,8 @@ class HostFlowChannel:
     def _refresh(self, src: int, dest: int) -> None:
         """One-sided get of dest's published grant row for this producer."""
         self.refreshes += 1
-        self.limit[src, dest] = np.maximum(self.limit[src, dest],
-                                           self.granted[dest, src])
+        fresh = self.fabric.get(src, dest, self._granted_region, (src,))
+        self.limit[src, dest] = np.maximum(self.limit[src, dest], fresh)
 
     def send(self, src: int, name: str, payload, tag: int, dest: int) -> bool:
         """Stage one credited message; False = deferred (cache dry even

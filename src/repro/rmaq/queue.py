@@ -348,9 +348,18 @@ class HostQueueGroup:
     The control plane (ft.heartbeat) and unit tests run the identical
     protocol — reservation order, backpressure, wraparound — against numpy
     buffers, without needing a device mesh.
+
+    Remote accesses route through a `core.fabric.Fabric`: the default
+    `LocalFabric` applies them immediately (byte-identical to the direct
+    mutation this class used to do — the diff test pins it), while
+    `repro.sim.fabric.SimFabric` delays/reorders/duplicates delivery so the
+    conformance suite can run this exact protocol under chaos schedules.
     """
 
-    def __init__(self, p: int, capacity: int, item_width: int, dtype=np.float32):
+    def __init__(self, p: int, capacity: int, item_width: int, dtype=np.float32,
+                 fabric=None, name: str = "q"):
+        from repro.core.fabric import default_fabric
+
         if capacity < 2 or capacity & (capacity - 1):
             raise QueueError(f"capacity must be a power of two >= 2, got {capacity}")
         self.p = p
@@ -358,15 +367,30 @@ class HostQueueGroup:
         self.item_width = item_width
         self.buf = np.zeros((p, capacity, item_width), dtype)
         self.ctrs = np.zeros((p, N_CTRS), np.uint64)
+        self.fabric = default_fabric(fabric, p=p)
+        self._name = name
+        self.fabric.register(f"{name}.buf", self.buf)
+        self.fabric.register(f"{name}.ctrs", self.ctrs)
 
     def step(self, sends: dict[int, list[tuple[int, np.ndarray]]]) -> dict[int, list[bool]]:
         """One enqueue epoch.  sends[r] = [(dest, payload), ...] in program
-        order.  Returns per-producer accepted flags (the receipt)."""
+        order.  Returns per-producer accepted flags (the receipt).
+
+        Fabric protocol per epoch: fence (close the previous epoch so the
+        reservation sees delivered state), ONE fused counter gather, then
+        per producer a batch of slot puts closed by a flush, and finally the
+        owner-side tail/enq/notif publish as `fence_add`s — ordered after
+        every payload of this epoch (payload visible ⇒ notification
+        visible, the §6.1 write-with-notification guarantee).
+        """
+        fab, name = self.fabric, self._name
+        fab.fence()  # close the previous epoch before reserving against it
         C = np.zeros((self.p, self.p), np.int64)
         for r, items in sends.items():
             for dst, _ in items:
                 C[r, dst] += 1
-        used = (self.ctrs[:, TAIL] - self.ctrs[:, HEAD]).astype(np.int64)
+        ctrs_all = fab.gather(0, f"{name}.ctrs")           # reservation gather
+        used = (ctrs_all[:, TAIL] - ctrs_all[:, HEAD]).astype(np.int64)
         grant, offset = admission_plan(C, used, self.capacity, xp=np)
         accepted: dict[int, list[bool]] = {}
         taken = np.zeros((self.p, self.p), np.int64)  # msgs placed so far per pair
@@ -376,18 +400,22 @@ class HostQueueGroup:
                 j = taken[r, dst]
                 ok = j < grant[r, dst]
                 if ok:
-                    seq = self.ctrs[dst, TAIL] + np.uint64(offset[r, dst] + j)
+                    seq = ctrs_all[dst, TAIL] + np.uint64(offset[r, dst] + j)
                     slot = int(seq) & (self.capacity - 1)
-                    self.buf[dst, slot] = np.asarray(payload, self.buf.dtype).reshape(-1)
+                    fab.put(r, dst, f"{name}.buf", slot,
+                            np.asarray(payload, self.buf.dtype).reshape(-1))
                 else:
-                    self.ctrs[r, DROP] += 1
+                    fab.add(r, r, f"{name}.ctrs", (DROP,), 1)
                 taken[r, dst] = j + 1
                 flags.append(bool(ok))
             accepted[r] = flags
+            fab.flush(r)                                   # producer's epoch close
         admitted = grant.sum(axis=0).astype(np.uint64)
-        self.ctrs[:, TAIL] += admitted
-        self.ctrs[:, ENQ] += admitted
-        self.ctrs[:, NOTIF] += admitted
+        for t in np.nonzero(admitted)[0]:
+            n = admitted[t]
+            fab.fence_add(int(t), f"{name}.ctrs", (TAIL,), n)
+            fab.fence_add(int(t), f"{name}.ctrs", (ENQ,), n)
+            fab.fence_add(int(t), f"{name}.ctrs", (NOTIF,), n)
         return accepted
 
     def drain(self, rank: int, max_n: int | None = None) -> list[np.ndarray]:

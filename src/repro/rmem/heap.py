@@ -469,6 +469,25 @@ def conservation(desc: PoolDescriptor, state: PoolState) -> dict:
     }
 
 
+def check_errors(desc: PoolDescriptor, state: PoolState) -> None:
+    """Host-side surface for the SPMD protocol violations (§10): device code
+    cannot raise, so double-free / share-dead deltas are dropped whole and
+    counted in the ERRS head column — this promotes a nonzero count to the
+    same `HeapError` the host path raises, naming the offending ranks.
+
+    Call it wherever the host owns the loop (schedulers, tests, benchmark
+    harnesses) to get fail-loud semantics on the SPMD path too.
+    """
+    errs = np.asarray(state.head)[..., ERRS].reshape(-1).astype(np.int64)
+    bad = np.nonzero(errs)[0]
+    if bad.size:
+        detail = ", ".join(f"rank {int(r)}: {int(errs[r])}" for r in bad)
+        raise HeapError(
+            f"SPMD refcount protocol violations (double-free or share-dead "
+            f"deltas dropped at the owner) — {detail}"
+        )
+
+
 # ----------------------------------------------------------- host simulation
 # 64-bit free-list head word: (generation << 32) | head-page-index.
 _IDX_MASK = (1 << 32) - 1
@@ -497,7 +516,10 @@ class HostPagePool:
     claim under low contention, like `locks_sim.LockWindow`.
     """
 
-    def __init__(self, n_pages: int, page_words: int = 1, dtype=np.float32):
+    def __init__(self, n_pages: int, page_words: int = 1, dtype=np.float32,
+                 fabric=None, name: str = "heap", owner: int = 0):
+        from repro.core.fabric import default_fabric
+
         if n_pages < 1 or n_pages >= _EMPTY:
             raise HeapError(f"bad n_pages {n_pages}")
         self.n_pages = n_pages
@@ -506,6 +528,16 @@ class HostPagePool:
         self.gen = np.zeros((n_pages,), np.uint32)        # per-page ABA tag
         self.ref = [_AtomicWord() for _ in range(n_pages)]
         self.head = _AtomicWord()
+        # The AMO words are registered as fabric banks: the default
+        # in-process fabric operates on these exact `_AtomicWord`s (same
+        # atomicity, same amo_count), the sim fabric interposes chaos
+        # (spurious CAS contention) between the protocol and the words.
+        self.owner = owner
+        self.fabric = default_fabric(fabric)
+        self._bank_head = f"{name}.head"
+        self._bank_ref = f"{name}.ref"
+        self.fabric.register_words(self._bank_head, [self.head], owner=owner)
+        self.fabric.register_words(self._bank_ref, self.ref, owner=owner)
         # build the initial list: 0 -> 1 -> ... -> n-1
         for i in range(n_pages - 1):
             self.next[i] = i + 1
@@ -518,58 +550,62 @@ class HostPagePool:
         return self.head.amo_count + sum(w.amo_count for w in self.ref)
 
     # ------------------------------------------------------------ alloc/free
-    def alloc(self) -> Optional[int]:
+    def alloc(self, origin: int = 0) -> Optional[int]:
         """Pop the head page (CAS loop); None when the pool is dry."""
+        fab = self.fabric
         while True:
-            old = self.head.read()
+            old = fab.read_word(origin, self._bank_head, 0)
             gen, idx = head_unpack(old)
             if idx == _EMPTY:
                 return None
             nxt = int(self.next[idx])
             new = head_pack(gen + 1, nxt)
-            if self.head.cas(old, new) == old:
+            if fab.cas(origin, self._bank_head, 0, old, new) == old:
                 self.gen[idx] += np.uint32(1)             # alloc bump
                 self.ref[idx].v = 1
                 self.allocs += 1
                 return idx
 
-    def free(self, idx: int) -> None:
+    def free(self, idx: int, origin: int = 0) -> None:
         """Push a dead page back (CAS loop); generation advances again."""
+        fab = self.fabric
         if not 0 <= idx < self.n_pages:
             raise HeapError(f"free of page {idx} outside pool")
-        if self.ref[idx].read() != 0:
+        if fab.read_word(origin, self._bank_ref, idx) != 0:
             raise HeapError(f"free of live page {idx} (refcount > 0)")
         self.gen[idx] += np.uint32(1)                     # free bump
         while True:
-            old = self.head.read()
+            old = fab.read_word(origin, self._bank_head, 0)
             gen, head_idx = head_unpack(old)
             # next[idx] is single-writer: only the 1→0 release winner can
             # push idx (double-free raises), so no lock is needed — a
             # failed CAS simply re-reads the head and re-links.
             self.next[idx] = head_idx
             new = head_pack(gen + 1, idx)
-            if self.head.cas(old, new) == old:
+            if fab.cas(origin, self._bank_head, 0, old, new) == old:
                 self.frees += 1
                 return
 
     # -------------------------------------------------------------- refcount
-    def ref_add(self, idx: int, delta: int = 1) -> int:
+    def ref_add(self, idx: int, delta: int = 1, origin: int = 0) -> int:
         """Fetch-and-add on the page's refcount word; returns the old count.
         Sharing a dead page is a protocol bug and raises."""
-        old = self.ref[idx].fetch_add(delta)
+        fab = self.fabric
+        old = fab.fetch_add(origin, self._bank_ref, idx, delta)
         if delta > 0 and old == 0:
-            self.ref[idx].fetch_add(-delta)
+            fab.fetch_add(origin, self._bank_ref, idx, -delta)
             raise HeapError(f"ref_add on dead page {idx} (ABA hazard)")
         return old
 
-    def release(self, idx: int) -> bool:
+    def release(self, idx: int, origin: int = 0) -> bool:
         """Decrement; the 1 → 0 winner pushes the page back.  True if freed."""
-        old = self.ref[idx].fetch_add(-1)
+        fab = self.fabric
+        old = fab.fetch_add(origin, self._bank_ref, idx, -1)
         if old <= 0:
-            self.ref[idx].fetch_add(1)
+            fab.fetch_add(origin, self._bank_ref, idx, 1)
             raise HeapError(f"release of dead page {idx} (double free)")
         if old == 1:
-            self.free(idx)
+            self.free(idx, origin=origin)
             return True
         return False
 

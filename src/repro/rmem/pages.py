@@ -97,15 +97,20 @@ class PagedKVPool:
     """
 
     def __init__(self, owners: Sequence[int], n_pages: int,
-                 page_words: int = 1, dtype=np.float32):
+                 page_words: int = 1, dtype=np.float32, fabric=None):
         if not owners:
             raise heap.HeapError("need at least one owner rank")
         self.owners = list(owners)
         self.n_pages = n_pages
         self.page_words = page_words
         self.dtype = dtype
-        self.pools = {r: heap.HostPagePool(n_pages, page_words, dtype)
-                      for r in self.owners}
+        # optional shared host transport (core.fabric): every owner pool's
+        # AMO words live on it, so the sim can chaos-schedule the whole
+        # paged-KV protocol; default is one in-process fabric per pool,
+        # exactly the pre-fabric behavior
+        self.fabric = fabric
+        self._pool_gen = 0              # unique bank names across re-joins
+        self.pools = {r: self._new_pool(r) for r in self.owners}
         # prefix index is per owner: sharing is only sound when the hit
         # lives where the request is routed (decoder-local gather)
         self.index: dict[tuple[int, bytes], PageRef] = {}
@@ -114,6 +119,12 @@ class PagedKVPool:
         self.hits = 0
         self.misses = 0
         self.dry = 0
+
+    def _new_pool(self, rank: int) -> "heap.HostPagePool":
+        self._pool_gen += 1
+        return heap.HostPagePool(
+            self.n_pages, self.page_words, self.dtype, fabric=self.fabric,
+            name=f"kv{rank}.{self._pool_gen}", owner=rank)
 
     # ------------------------------------------------------------- routing
     def route(self, first_key: bytes) -> int:
@@ -189,8 +200,7 @@ class PagedKVPool:
         """Rank join: bring up an empty pool and add it to the routing set."""
         if rank in self.pools:
             raise heap.HeapError(f"rank {rank} already owns a pool")
-        self.pools[rank] = heap.HostPagePool(self.n_pages, self.page_words,
-                                             self.dtype)
+        self.pools[rank] = self._new_pool(rank)
         self.owners.append(rank)
 
     def migrate_from(self, leaving: int) -> dict:

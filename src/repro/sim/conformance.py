@@ -1,0 +1,745 @@
+"""Property-based conformance suite over the simulated fabric (DESIGN.md §11).
+
+Runs the *existing* host protocol state machines — queue enqueue/dequeue
+(§6.2), credit grant/spend (§9), heap alloc/free/ref_update (§10), epoch
+fence ordering (§2.3), and the Fig. 3 lock words — at 256+ simulated ranks
+under seeded chaos schedules, asserting the global invariants **after every
+simulated step**:
+
+  * queue:  ``0 <= tail - head <= capacity`` per ring; drained payloads
+    match the admission-order FIFO oracle per target; at quiescence every
+    accepted message is drained exactly once and DROP == rejections.
+  * flow:   ``sum(granted) - head == capacity`` per target at every event;
+    ``rejected == 0`` always; outstanding credits + occupancy == capacity
+    at quiescence.
+  * heap:   ``free_top + live == n_pages`` per pool; stale (page, tag)
+    descriptors never validate; a stale head CAS never succeeds across
+    intervening alloc/free (no-ABA); illegal ops raise without corrupting.
+  * epoch:  per-cell stamps are monotone and a closed fence implies every
+    op of that epoch is visible; payload rides the stamp's transfer.
+  * lock:   mutual exclusion over the Fig. 3 word layout — no lost update
+    on a read-modify-write split across an interleaving window.
+  * kv:     paged-KV prefix sharing + `ft.elastic.kv_membership_change`
+    (rank leave/join mid-run) preserve pool conservation throughout.
+
+Every run is a pure function of its ``(seed, schedule)`` pair; a violation
+raises `ConformanceError` carrying the exact repro command line.  The
+fault-injection schedule ``tear`` (per-op delivery, notification not gated
+on payload — the Quo-Vadis-RMA divergence class) MUST be caught; the CLI's
+``--expect-fail`` asserts that it is.
+
+CLI::
+
+    python -m repro.sim.conformance --ranks 256 --seeds 0,1 \
+        --schedules reorder,delay,duplicate --protocols queue,flow,heap
+    python -m repro.sim.conformance --smoke        # 64-rank 3-seed subset
+    python -m repro.sim.conformance --schedules tear --expect-fail
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import dataclasses
+import itertools
+import os
+import random
+import sys
+
+import numpy as np
+
+from repro.core.locks_sim import (GLOBAL_EXCL_UNIT, GLOBAL_SHRD_MASK,
+                                  WRITER_BIT, _AtomicWord)
+from repro.ft.elastic import kv_membership_change
+from repro.rmaq import queue as rq
+from repro.rmaq.channel import Lane
+from repro.rmaq.flow import HostFlowChannel
+from repro.rmaq.queue import HostQueueGroup
+from repro.rmem import heap
+from repro.rmem.pages import PagedKVPool, page_key
+from repro.sim.fabric import SCHEDULES, SimFabric
+from repro.sim.sched import Scheduler, VirtualClock
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    protocol: str
+    n_ranks: int
+    schedule: str
+    seed: int
+
+    def repro(self) -> str:
+        return (
+            "PYTHONPATH=src python -m repro.sim.conformance "
+            f"--protocols {self.protocol} --ranks {self.n_ranks} "
+            f"--schedules {self.schedule} --seeds {self.seed}"
+        )
+
+
+class ConformanceError(AssertionError):
+    """An invariant violation, reproducible from its (seed, schedule)."""
+
+    def __init__(self, spec: RunSpec, step: int, detail: str) -> None:
+        self.spec = spec
+        self.step = step
+        self.detail = detail
+        super().__init__(
+            f"[{spec.protocol} p={spec.n_ranks} schedule={spec.schedule} "
+            f"seed={spec.seed}] invariant violation at step {step}: {detail}\n"
+            f"  repro: {spec.repro()}"
+        )
+
+
+def _rng(seed: int, salt: int) -> random.Random:
+    return random.Random(seed * 1_000_003 + salt)
+
+
+def _harness(spec: RunSpec, on_event):
+    clock = VirtualClock()
+    fab = SimFabric(spec.n_ranks, SCHEDULES[spec.schedule], spec.seed,
+                    clock=clock)
+    sched = Scheduler(spec.seed, clock=clock, on_event=on_event)
+    sched.attach(fab)
+    return fab, sched
+
+
+# ======================================================================
+# queue: enqueue/dequeue at p ranks, FIFO-per-target content oracle
+# ======================================================================
+def run_queue(spec: RunSpec, epochs: int = 3, capacity: int = 16,
+              burst: int = 2) -> dict:
+    p = spec.n_ranks
+
+    def checker(kind, who, sched):
+        ctrs = group.ctrs
+        occ = ctrs[:, rq.TAIL].astype(np.int64) - ctrs[:, rq.HEAD].astype(np.int64)
+        if occ.min() < 0 or occ.max() > capacity:
+            raise ConformanceError(
+                spec, sched.events,
+                f"ring occupancy out of [0, {capacity}]: min {occ.min()}, max {occ.max()}")
+
+    fab, sched = _harness(spec, checker)
+    group = HostQueueGroup(p, capacity, 1, fabric=fab)
+    oracle = [collections.deque() for _ in range(p)]   # admitted FIFO per target
+    stage: dict[int, list] = {}
+    state = {"epoch_done": 0, "accepted": 0, "rejected": 0, "drained": 0}
+    val_ctr = itertools.count(1)
+
+    def drain_check(r: int, n: int) -> None:
+        for row in group.drain(r, n):
+            got = float(row[0])
+            if not oracle[r]:
+                raise ConformanceError(
+                    spec, sched.events, f"rank {r} drained value {got} never admitted")
+            want = oracle[r].popleft()
+            if got != want:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"rank {r} drained {got}, expected {want} "
+                    "(content/FIFO violation: payload decoupled from notification)")
+            state["drained"] += 1
+
+    def producer(r: int):
+        rng = _rng(spec.seed, 17 * r + 1)
+        for e in range(epochs):
+            stage[r] = [(rng.randrange(p), float(next(val_ctr)))
+                        for _ in range(rng.randint(1, burst))]
+            yield
+            while state["epoch_done"] <= e:
+                yield
+            for _ in range(rng.randint(1, 2)):
+                drain_check(r, rng.randint(1, 4))
+                yield
+
+    def driver():
+        for e in range(epochs):
+            while len(stage) < p:
+                yield
+            sends = {r: [(dst, np.float32(v)) for dst, v in stage[r]]
+                     for r in sorted(stage)}
+            stage.clear()
+            accepted = group.step(sends)
+            # oracle: admission order is producers in rank order, messages
+            # in program order — the rank-ordered fetch-and-add (§6.2)
+            for r in sorted(sends):
+                for (dst, v), ok in zip(sends[r], accepted[r]):
+                    if ok:
+                        oracle[dst].append(float(v))
+                        state["accepted"] += 1
+                    else:
+                        state["rejected"] += 1
+            state["epoch_done"] = e + 1
+            yield
+
+    for r in range(p):
+        sched.spawn(f"rank{r:04d}", producer(r))
+    sched.spawn("driver", driver())
+    report = sched.run()
+
+    fab.fence()                                         # complete stragglers
+    for r in range(p):
+        drain_check(r, capacity)
+        if oracle[r]:
+            raise ConformanceError(
+                spec, sched.events,
+                f"rank {r}: {len(oracle[r])} admitted messages lost in flight")
+    if state["drained"] != state["accepted"]:
+        raise ConformanceError(
+            spec, sched.events,
+            f"drained {state['drained']} != accepted {state['accepted']}")
+    drops = int(group.ctrs[:, rq.DROP].sum())
+    if drops != state["rejected"]:
+        raise ConformanceError(
+            spec, sched.events,
+            f"DROP counters {drops} != observed rejections {state['rejected']}")
+    return {"protocol": "queue", **report, **state, "chaos": fab.chaos_stats()}
+
+
+# ======================================================================
+# flow: credit conservation at every event, rejected == 0 always
+# ======================================================================
+def run_flow(spec: RunSpec, epochs: int = 3) -> dict:
+    p = spec.n_ranks
+    capacity = 1 << (2 * p - 1).bit_length()            # >= 2p, power of two
+
+    def checker(kind, who, sched):
+        granted = hfc.granted.sum(axis=(1, 2)).astype(np.int64)
+        head = hfc.ch.group.ctrs[:, rq.HEAD].astype(np.int64)
+        bad = np.nonzero(granted - head != capacity)[0]
+        if bad.size:
+            t = int(bad[0])
+            raise ConformanceError(
+                spec, sched.events,
+                f"credit conservation: sum(granted[{t}])={granted[t]} - "
+                f"head={head[t]} != capacity {capacity} "
+                f"(+{bad.size - 1} more targets)")
+        if hfc.rejected:
+            raise ConformanceError(
+                spec, sched.events,
+                f"{hfc.rejected} credited sends rejected at the ring — "
+                "credit admission must make ring-full impossible")
+
+    fab, sched = _harness(spec, checker)
+    hfc = HostFlowChannel(p, capacity, [Lane("c", (1,), "float32")], fabric=fab)
+    staged = collections.Counter()
+    state = {"epoch_done": 0, "sent": 0, "deferred": 0, "received": 0}
+
+    def producer(r: int):
+        rng = _rng(spec.seed, 31 * r + 5)
+        for e in range(epochs):
+            for _ in range(rng.randint(1, 2)):
+                ok = hfc.send(r, "c", np.float32([r]), e, rng.randrange(p))
+                state["sent" if ok else "deferred"] += 1
+                yield
+            staged[e] += 1
+            yield
+            while state["epoch_done"] <= e:
+                yield
+            state["received"] += len(hfc.recv(r, rng.randint(1, 4)))
+            yield
+
+    def driver():
+        for e in range(epochs):
+            while staged[e] < p:
+                yield
+            hfc.flush()
+            state["epoch_done"] = e + 1
+            yield
+
+    for r in range(p):
+        sched.spawn(f"rank{r:04d}", producer(r))
+    sched.spawn("driver", driver())
+    report = sched.run()
+
+    fab.fence()
+    for r in range(p):
+        state["received"] += len(hfc.recv(r, None))
+    for r in range(p):
+        c = hfc.conservation(r)
+        if (c["granted_minus_head"] != capacity
+                or c["outstanding_plus_occupancy"] != capacity
+                or c["occupancy"] != 0):
+            raise ConformanceError(
+                spec, sched.events, f"final conservation at target {r}: {c}")
+    if state["received"] != state["sent"]:
+        raise ConformanceError(
+            spec, sched.events,
+            f"received {state['received']} != credited sends {state['sent']}")
+    return {"protocol": "flow", **report, **state,
+            "refreshes": hfc.refreshes, "chaos": fab.chaos_stats()}
+
+
+# ======================================================================
+# heap: per-pool conservation, no-ABA, fail-loud illegal ops
+# ======================================================================
+def run_heap(spec: RunSpec, rounds: int = 6, n_pages: int = 6,
+             check_stride: int = 8) -> dict:
+    p = spec.n_ranks
+
+    def check_pool(t: int, step: int) -> None:
+        c = pools[t].conservation()
+        if c["free_plus_live"] != n_pages:
+            raise ConformanceError(
+                spec, step,
+                f"pool {t} conservation: free {c['free']} + live {c['live']} "
+                f"!= {n_pages}")
+
+    def checker(kind, who, sched):
+        # full free-list walks are O(n_pages): sweep pools round-robin per
+        # event and all of them at quiescence
+        check_pool((sched.events // check_stride) % p, sched.events)
+
+    fab, sched = _harness(spec, checker)
+    pools = {t: heap.HostPagePool(n_pages, fabric=fab, name=f"pool{t}",
+                                  owner=t) for t in range(p)}
+    holders: collections.Counter = collections.Counter()   # (owner, pid) -> refs
+    stale: list[tuple[int, int, int]] = []                 # freed (owner, pid, tag)
+    state = {"allocs": 0, "frees": 0, "shares": 0, "aba_defended": 0,
+             "stale_tags_checked": 0, "illegal_caught": 0}
+
+    def worker(r: int):
+        rng = _rng(spec.seed, 7 * r + 3)
+        mine: list[tuple[int, int, int]] = []
+        for _ in range(rounds):
+            roll = rng.random()
+            try:
+                if roll < 0.45 or not mine:
+                    t = rng.randrange(p)
+                    pid = pools[t].alloc(origin=r)
+                    if pid is not None:
+                        mine.append((t, pid, pools[t].tag(pid)))
+                        holders[(t, pid)] += 1
+                        state["allocs"] += 1
+                elif roll < 0.62:
+                    t, pid, _ = mine[rng.randrange(len(mine))]
+                    pools[t].ref_add(pid, 1, origin=r)
+                    mine.append((t, pid, pools[t].tag(pid)))
+                    holders[(t, pid)] += 1
+                    state["shares"] += 1
+                elif roll < 0.88:
+                    t, pid, tag = mine.pop(rng.randrange(len(mine)))
+                    freed = pools[t].release(pid, origin=r)
+                    holders[(t, pid)] -= 1
+                    if freed:
+                        stale.append((t, pid, tag))
+                        state["frees"] += 1
+                else:
+                    # deliberate protocol violation: double-free a page that
+                    # is currently dead MUST raise and corrupt nothing
+                    t = rng.randrange(p)
+                    dead = [i for i in range(n_pages)
+                            if pools[t].ref[i].v == 0]
+                    if dead:
+                        pid = dead[rng.randrange(len(dead))]
+                        try:
+                            pools[t].release(pid, origin=r)
+                        except heap.HeapError:
+                            state["illegal_caught"] += 1
+                        else:
+                            raise ConformanceError(
+                                spec, sched.events,
+                                f"double-free of dead page ({t}, {pid}) did "
+                                "not raise HeapError")
+                        check_pool(t, sched.events)
+            except heap.HeapError as e:
+                raise ConformanceError(
+                    spec, sched.events, f"legal op raised HeapError: {e}")
+            # stale descriptors must never validate (ABA tag defense)
+            if stale and rng.random() < 0.3:
+                t, pid, tag = stale[rng.randrange(len(stale))]
+                state["stale_tags_checked"] += 1
+                if pools[t].tag_valid(pid, tag):
+                    raise ConformanceError(
+                        spec, sched.events,
+                        f"stale tag ({t}, {pid}, gen {tag}) still validates "
+                        "after free (ABA)")
+            yield
+
+    def aba_prober():
+        """The crafted stale-CAS interleaving: observe a head word, let the
+        world move, then CAS with the stale observation — the generation
+        tag must make it fail whenever any alloc/free intervened."""
+        rng = _rng(spec.seed, 999)
+        for _ in range(4):
+            t = rng.randrange(p)
+            old = fab.read_word(p, f"pool{t}.head", 0)
+            version = pools[t].allocs + pools[t].frees
+            yield
+            yield
+            got = fab.cas(p, f"pool{t}.head", 0, old, heap.head_pack(0, 0))
+            moved = (pools[t].allocs + pools[t].frees) != version
+            if got == old:
+                if moved:
+                    raise ConformanceError(
+                        spec, sched.events,
+                        f"stale CAS on pool {t} head succeeded across "
+                        "intervening alloc/free (ABA tag failed)")
+                # nothing intervened: the CAS was legitimate — undo it
+                # (retry loop: only spurious cas-storm failures can miss)
+                while fab.cas(p, f"pool{t}.head", 0,
+                              heap.head_pack(0, 0), old) != heap.head_pack(0, 0):
+                    pass
+            else:
+                state["aba_defended"] += 1
+            yield
+
+    for r in range(p):
+        sched.spawn(f"rank{r:04d}", worker(r))
+    sched.spawn("aba-prober", aba_prober())
+    report = sched.run()
+
+    live_expect = {t: len({pid for (tt, pid), n in holders.items()
+                           if tt == t and n > 0}) for t in range(p)}
+    for t in range(p):
+        check_pool(t, sched.events)
+        if pools[t].live_count() != live_expect[t]:
+            raise ConformanceError(
+                spec, sched.events,
+                f"pool {t}: live {pools[t].live_count()} != "
+                f"oracle {live_expect[t]}")
+    return {"protocol": "heap", **report, **state,
+            "amos": sum(pl.total_amos for pl in pools.values()),
+            "chaos": fab.chaos_stats()}
+
+
+# ======================================================================
+# epoch: fence ordering — stamps monotone, fence close implies visibility
+# ======================================================================
+def run_epoch(spec: RunSpec, epochs: int = 4) -> dict:
+    p = spec.n_ranks
+
+    def checker(kind, who, sched):
+        stamps = cells[:, 0].copy()
+        if (stamps < shadow).any():
+            t = int(np.nonzero(stamps < shadow)[0][0])
+            raise ConformanceError(
+                spec, sched.events,
+                f"cell {t} epoch stamp regressed {shadow[t]} -> {stamps[t]}")
+        np.maximum(shadow, stamps, out=shadow)
+        # payload rides the stamp's fused transfer: a stamped cell must
+        # carry that stamp's payload (tear decouples them)
+        idx = np.arange(p)
+        writer = (idx - 1) % p
+        on = stamps > 0
+        bad = np.nonzero(on & (cells[:, 1] != stamps * p + writer))[0]
+        if bad.size:
+            t = int(bad[0])
+            raise ConformanceError(
+                spec, sched.events,
+                f"cell {t}: stamp {stamps[t]} visible but payload "
+                f"{cells[t, 1]} is from another epoch (notification "
+                "decoupled from payload)")
+
+    fab, sched = _harness(spec, checker)
+    cells = np.zeros((p, 2), np.int64)
+    fab.register("cell", cells)
+    shadow = np.zeros(p, np.int64)
+    staged = collections.Counter()
+    state = {"epoch_done": 0}
+
+    def writer_task(r: int):
+        for e in range(1, epochs + 1):
+            dst = (r + 1) % p
+            fab.put(r, dst, "cell", (1,), e * p + r)    # payload first…
+            fab.put(r, dst, "cell", (0,), e)            # …stamp rides with it
+            fab.flush(r)
+            staged[e] += 1
+            yield
+            while state["epoch_done"] < e:
+                yield
+
+    def driver():
+        for e in range(1, epochs + 1):
+            while staged[e] < p:
+                yield
+            fab.fence()
+            if not (cells[:, 0] == e).all():
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"fence {e} closed with stamps {cells[:, 0].min()}..",
+                )
+            state["epoch_done"] = e
+            yield
+
+    for r in range(p):
+        sched.spawn(f"rank{r:04d}", writer_task(r))
+    sched.spawn("driver", driver())
+    report = sched.run()
+    return {"protocol": "epoch", **report, "epochs": epochs,
+            "chaos": fab.chaos_stats()}
+
+
+# ======================================================================
+# lock: Fig. 3 words — mutual exclusion, no lost update, lockall readers
+# ======================================================================
+def run_lock(spec: RunSpec, rounds: int = 2) -> dict:
+    p = spec.n_ranks
+    fab, sched = _harness(spec, None)
+    master = _AtomicWord()
+    local = [_AtomicWord() for _ in range(p)]
+    fab.register_words("lock.master", [master])
+    fab.register_words("lock.local", local)
+    cells = np.zeros((p, 1), np.int64)
+    fab.register("lock.cell", cells)
+    commits = np.zeros(p, np.int64)
+    state = {"acquires": 0, "reads": 0}
+    MAX_TRIES = 200_000
+
+    def writer(r: int):
+        rng = _rng(spec.seed, 13 * r + 11)
+        for _ in range(rounds):
+            t = rng.randrange(p)
+            tries = 0
+            while True:                                 # paper §2.3 protocol
+                old = fab.fetch_add(r, "lock.master", 0, GLOBAL_EXCL_UNIT)
+                if not (old & GLOBAL_SHRD_MASK):
+                    if fab.cas(r, "lock.local", t, 0, WRITER_BIT) == 0:
+                        break
+                fab.fetch_add(r, "lock.master", 0, -GLOBAL_EXCL_UNIT)
+                tries += 1
+                if tries > MAX_TRIES:
+                    raise ConformanceError(
+                        spec, sched.events,
+                        f"rank {r} starved acquiring lock {t}")
+                yield
+            # critical section: non-atomic RMW split across a yield — only
+            # mutual exclusion prevents the lost update
+            v = int(fab.get(r, t, "lock.cell", (0,)))
+            yield
+            fab.put(r, t, "lock.cell", (0,), v + 1)
+            fab.flush_remote(r)                         # complete before unlock
+            commits[t] += 1
+            state["acquires"] += 1
+            fab.fetch_add(r, "lock.local", t, -WRITER_BIT)
+            fab.fetch_add(r, "lock.master", 0, -GLOBAL_EXCL_UNIT)
+            yield
+
+    def reader(r: int):
+        rng = _rng(spec.seed, 29 * r + 7)
+        for _ in range(rounds):
+            tries = 0
+            while True:                                 # MPI_Win_lock_all
+                if fab.fetch_add(r, "lock.master", 0, 1) < GLOBAL_EXCL_UNIT:
+                    break
+                fab.fetch_add(r, "lock.master", 0, -1)
+                tries += 1
+                if tries > MAX_TRIES:
+                    raise ConformanceError(
+                        spec, sched.events, f"reader {r} starved on lock_all")
+                yield
+            t = rng.randrange(p)
+            seen = int(fab.get(r, t, "lock.cell", (0,)))
+            if seen != commits[t]:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"reader {r} saw cell {t} = {seen} under lock_all but "
+                    f"{commits[t]} increments committed (torn/lost update)")
+            state["reads"] += 1
+            fab.fetch_add(r, "lock.master", 0, -1)
+            yield
+
+    for r in range(p):
+        sched.spawn(f"w{r:04d}", writer(r))
+        if r % 4 == 0:
+            sched.spawn(f"r{r:04d}", reader(r))
+    report = sched.run()
+
+    if not (cells[:, 0] == commits).all():
+        t = int(np.nonzero(cells[:, 0] != commits)[0][0])
+        raise ConformanceError(
+            spec, sched.events,
+            f"lost update on cell {t}: {cells[t, 0]} != {commits[t]} commits")
+    if master.v != 0 or any(w.v for w in local):
+        raise ConformanceError(spec, sched.events, "lock words not released")
+    return {"protocol": "lock", **report, **state,
+            "amos": master.amo_count + sum(w.amo_count for w in local),
+            "chaos": fab.chaos_stats()}
+
+
+# ======================================================================
+# kv: paged-KV prefix sharing + elastic leave/join mid-run
+# ======================================================================
+def run_kv(spec: RunSpec, rounds: int = 4, n_pages: int = 8) -> dict:
+    p = spec.n_ranks
+    n_owners = min(p, 8)
+    n_requesters = min(p, 32)
+
+    def checker(kind, who, sched):
+        c = kv.conservation()
+        if not c["ok"]:
+            bad = {r: v for r, v in c["per_owner"].items()
+                   if v["free_plus_live"] != v["capacity"]}
+            raise ConformanceError(
+                spec, sched.events, f"kv pool conservation violated: {bad}")
+
+    fab, sched = _harness(spec, checker)
+    kv = PagedKVPool(list(range(n_owners)), n_pages, fabric=fab)
+    rid_ctr = itertools.count(1)
+    state = {"mapped": 0, "released": 0, "dry": 0, "migrated": None}
+    open_tables: list[int] = []
+
+    def requester(r: int):
+        rng = _rng(spec.seed, 41 * r + 19)
+        for _ in range(rounds):
+            key = page_key(np.full(4, rng.randrange(10), np.int32))
+            dest = kv.route(key)
+            if dest not in kv.owners:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"routing returned departed owner {dest}")
+            res = kv.acquire(dest, key)
+            if res is None:
+                state["dry"] += 1
+                yield
+                continue
+            rid = next(rid_ctr)
+            kv.table_set(rid, [res[0]])
+            open_tables.append(rid)
+            state["mapped"] += 1
+            yield
+            if open_tables and rng.random() < 0.6:
+                kv.table_release(open_tables.pop(rng.randrange(len(open_tables))))
+                state["released"] += 1
+                yield
+
+    def membership():
+        """Mid-epoch leave + join: live pages re-home, conservation holds
+        before/after (checked by `ft.elastic.kv_membership_change`)."""
+        for _ in range(3 * n_requesters // 2):
+            yield
+        report = kv_membership_change(kv, leave=kv.owners[0], join=n_owners)
+        state["migrated"] = {"moved": report["migration"]["moved"],
+                             "merged": report["migration"]["merged"]}
+        yield
+
+    for r in range(n_requesters):
+        sched.spawn(f"req{r:04d}", requester(r))
+    sched.spawn("membership", membership())
+    report = sched.run()
+
+    while open_tables:                                   # drain every table
+        kv.table_release(open_tables.pop())
+    if kv.stats()["live_pages"] != {r: 0 for r in kv.owners}:
+        raise ConformanceError(
+            spec, sched.events,
+            f"pages leaked after full release: {kv.stats()['live_pages']}")
+    return {"protocol": "kv", **report, **state, "kv": kv.stats(),
+            "chaos": fab.chaos_stats()}
+
+
+# ======================================================================
+# suite driver + CLI
+# ======================================================================
+PROTOCOLS = {
+    "queue": run_queue,
+    "flow": run_flow,
+    "heap": run_heap,
+    "epoch": run_epoch,
+    "lock": run_lock,
+    "kv": run_kv,
+}
+
+
+def run_one(protocol: str, n_ranks: int, schedule: str, seed: int,
+            **overrides) -> dict:
+    if protocol not in PROTOCOLS:
+        raise ValueError(f"unknown protocol {protocol!r} (have {sorted(PROTOCOLS)})")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r} (have {sorted(SCHEDULES)})")
+    spec = RunSpec(protocol, n_ranks, schedule, seed)
+    return PROTOCOLS[protocol](spec, **overrides)
+
+
+def run_suite(protocols, n_ranks: int, schedules, seeds) -> list[dict]:
+    from repro.core.fabric import FabricError
+    from repro.sim.sched import SchedulerError
+
+    results = []
+    for protocol in protocols:
+        for schedule in schedules:
+            for seed in seeds:
+                spec = RunSpec(protocol, n_ranks, schedule, seed)
+                entry = {"spec": spec, "ok": True, "error": None}
+                try:
+                    entry["report"] = PROTOCOLS[protocol](spec)
+                except ConformanceError as e:
+                    entry.update(ok=False, error=e)
+                except (SchedulerError, FabricError) as e:
+                    # livelock / transport-internal failures must not abort
+                    # the sweep: report them with the same repro line
+                    entry.update(ok=False, error=ConformanceError(
+                        spec, -1, f"{type(e).__name__}: {e}"))
+                results.append(entry)
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="run the simulated-fabric conformance suite")
+    ap.add_argument("--protocols", default="queue,flow,heap,epoch,lock")
+    ap.add_argument("--ranks", type=int, default=256)
+    ap.add_argument("--schedules", default="reorder,delay,duplicate")
+    ap.add_argument("--seeds", default="0")
+    ap.add_argument("--sweep", type=int, default=0,
+                    help="run N consecutive seeds starting at --seed-base")
+    ap.add_argument("--seed-base", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="3-seed 64-rank subset (the bench-smoke rider)")
+    ap.add_argument("--expect-fail", action="store_true",
+                    help="exit 0 IFF at least one violation is caught "
+                         "(fault-injection schedules like 'tear')")
+    ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"),
+                    help="append a markdown summary to this file")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        ranks, seeds = 64, [0, 1, 2]
+        protocols = list(PROTOCOLS)
+        schedules = ["reorder", "delay", "duplicate"]
+    else:
+        ranks = args.ranks
+        protocols = [s for s in args.protocols.split(",") if s]
+        schedules = [s for s in args.schedules.split(",") if s]
+        if args.sweep:
+            seeds = list(range(args.seed_base, args.seed_base + args.sweep))
+        else:
+            seeds = [int(s) for s in args.seeds.split(",") if s]
+
+    results = run_suite(protocols, ranks, schedules, seeds)
+    lines = []
+    n_fail = 0
+    for r in results:
+        spec = r["spec"]
+        tag = f"{spec.protocol:6s} p={spec.n_ranks} {spec.schedule:9s} seed={spec.seed}"
+        if r["ok"]:
+            rep = r["report"]
+            lines.append(f"PASS {tag}  events={rep['events']} "
+                         f"vt={rep['virtual_time']}")
+        else:
+            n_fail += 1
+            lines.append(f"FAIL {tag}\n  {r['error']}")
+    print("\n".join(lines))
+    print(f"\n{len(results) - n_fail}/{len(results)} runs passed "
+          f"({len(protocols)} protocols x {len(schedules)} schedules x "
+          f"{len(seeds)} seeds at {ranks} ranks)")
+
+    if args.summary:
+        try:
+            with open(args.summary, "a") as f:
+                f.write(f"### sim-chaos conformance ({ranks} ranks)\n\n```\n")
+                f.write("\n".join(lines))
+                f.write("\n```\n")
+        except OSError:
+            pass
+
+    if args.expect_fail:
+        if n_fail == 0:
+            print("ERROR: --expect-fail but every run passed "
+                  "(fault injection not detected)")
+            return 1
+        return 0
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

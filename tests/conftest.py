@@ -1,0 +1,32 @@
+"""Suite-wide determinism fixtures (deflake + seed-pin).
+
+Every test gets the NumPy and stdlib PRNGs re-seeded from a stable hash of
+its own node id, so:
+
+  * a test that forgets to seed is still reproducible run-to-run;
+  * tests are order-independent (`pytest -p no:randomly`, `-k` subsets,
+    and future parallel runners all see the same per-test streams) — no
+    test can leak PRNG state into the next;
+  * two consecutive tier-1 runs produce identical pass sets, which the CI
+    `determinism` job asserts by diffing junit outcome lists.
+
+JAX PRNGs are explicit-key (`jax.random.PRNGKey(seed)`) everywhere in this
+suite, so they are deterministic by construction; this fixture covers the
+implicit global streams only.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_prngs(request):
+    seed = zlib.crc32(request.node.nodeid.encode()) & 0x7FFFFFFF
+    random.seed(seed)
+    np.random.seed(seed)
+    yield

@@ -57,7 +57,10 @@ except ImportError:
         def integers(min_value, max_value):
             rng = random.Random(f"int:{min_value}:{max_value}")
             vals = {min_value, max_value, (min_value + max_value) // 2}
-            while len(vals) < 12:
+            # cap at the range size: a narrow range (e.g. integers(0, 2))
+            # can never yield 12 distinct values — don't spin forever
+            target = min(12, max_value - min_value + 1)
+            while len(vals) < target:
                 vals.add(rng.randint(min_value, max_value))
             return _Examples(sorted(vals))
 

@@ -103,10 +103,24 @@ for rid, toks in prompts.items():
 try:
     eng5.run_until_drained(max_steps=1)
 except DrainError as e:
-    assert len(e.undrained) > 0 and set(e.undrained) <= set(prompts)
+    # the EXACT remainder, sorted: submitted minus whatever completed
+    assert e.undrained == tuple(sorted(set(prompts) - set(eng5.results))), e
+    assert len(e.undrained) > 0
     print(f"PASS drain timeout raises: {len(e.undrained)} undrained ids reported")
 else:
     raise AssertionError("run_until_drained returned despite max_steps=1")
+
+# flow engine with a ZERO budget: every submitted rid reported, verbatim
+eng5b = DisaggEngine(mesh, "serve", cfg, seed=3)
+for rid, toks in prompts.items():
+    eng5b.submit(rid, toks)
+try:
+    eng5b.run_until_drained(max_steps=0)
+except DrainError as e:
+    assert e.undrained == tuple(sorted(prompts)), e
+    print(f"PASS flow drain: zero budget reports all {len(e.undrained)} rids")
+else:
+    raise AssertionError("flow run_until_drained returned despite max_steps=0")
 
 # ---- paged mode (DESIGN.md §10): page-table messages, shared prefixes ----
 # half the prompt is a shared prefix, so every request after the first at a
@@ -166,3 +180,19 @@ assert eng7.paged_stats()["pool_conservation_ok"]
 assert eng7.pool_stalls > 0          # the pool went dry and requests waited
 print(f"PASS disagg paged backpressure: pool_stalls={eng7.pool_stalls}, "
       f"all served through a 4-page pool")
+
+# ---- paged engine DrainError: exact undrained rids + pool still consistent
+eng8 = DisaggEngine(mesh, "serve", cfg6, seed=3)
+for rid, toks in prompts6.items():
+    eng8.submit(rid, toks)
+try:
+    eng8.run_until_drained(max_steps=2)
+except DrainError as e:
+    assert e.undrained == tuple(sorted(set(prompts6) - set(eng8.results))), e
+    assert len(e.undrained) > 0
+    # the abort left the paged pools consistent (in-flight refs still held)
+    assert eng8.paged_stats()["pool_conservation_ok"]
+    print(f"PASS paged drain timeout: {len(e.undrained)} exact undrained ids, "
+          f"pool conservation OK")
+else:
+    raise AssertionError("paged run_until_drained returned despite max_steps=2")

@@ -1,0 +1,282 @@
+"""Randomized fuzzing of the host CAS free-list (`rmem.heap.HostPagePool`).
+
+Three layers:
+
+  * **sequential oracle** — a reference model of the free list (a literal
+    LIFO stack + refcount map).  Seeded random traces replayed one op at a
+    time must match the pool EXACTLY: same page ids out of alloc, same
+    freed flags, same HeapError raises, same conservation counts.
+  * **threaded fuzz** — N threads × random legal traces against one pool
+    (real `_AtomicWord` contention through the fabric AMO plane); at join
+    the conservation invariant and the per-thread holdings oracle must
+    agree with the pool.
+  * **shrinking** — a failing trace is delta-debugged down to a minimal
+    reproduction before being reported, so a fuzz failure reads like a
+    unit test, not a 300-op dump.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.rmem import heap
+
+from .helpers import given, settings, st
+
+
+# ---------------------------------------------------------------- the oracle
+class SeqOracle:
+    """Reference model: free list as an explicit LIFO stack, refcounts as a
+    dict.  Mirrors HostPagePool's observable behavior exactly (pop from
+    head, push to head, free at the 1 -> 0 transition, HeapError on
+    double-free / share-dead)."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self.stack = list(range(n_pages))          # stack[0] is the head
+        self.ref: dict[int, int] = {}
+
+    def alloc(self):
+        if not self.stack:
+            return None
+        pid = self.stack.pop(0)
+        self.ref[pid] = 1
+        return pid
+
+    def ref_add(self, pid):
+        if self.ref.get(pid, 0) == 0:
+            raise heap.HeapError("oracle: share-dead")
+        self.ref[pid] += 1
+
+    def release(self, pid):
+        if self.ref.get(pid, 0) == 0:
+            raise heap.HeapError("oracle: double-free")
+        self.ref[pid] -= 1
+        if self.ref[pid] == 0:
+            self.stack.insert(0, pid)
+            return True
+        return False
+
+    def conservation(self):
+        live = sum(1 for v in self.ref.values() if v > 0)
+        return {"free": len(self.stack), "live": live,
+                "free_plus_live": len(self.stack) + live,
+                "capacity": self.n_pages}
+
+
+# ops are (verb, arg): ("alloc", None) | ("ref_add", slot) | ("release", slot)
+# where `slot` indexes the actor's currently-held page list (stable across
+# replays because both sides see identical alloc results).
+def gen_trace(seed: int, n_ops: int, p_alloc=0.5, p_share=0.2):
+    rng = np.random.RandomState(seed)
+    trace = []
+    held = 0
+    for _ in range(n_ops):
+        roll = rng.rand()
+        if roll < p_alloc or held == 0:
+            trace.append(("alloc", None))
+            held += 1                              # optimistic (may be dry)
+        elif roll < p_alloc + p_share:
+            trace.append(("ref_add", int(rng.randint(held))))
+            held += 1
+        else:
+            trace.append(("release", int(rng.randint(held))))
+            held -= 1
+    return trace
+
+
+def run_trace(pool_ops, trace, origin=0):
+    """Replay ops against anything exposing alloc/ref_add/release; returns
+    the outcome log [(verb, page, result)].  HeapError propagates."""
+    held: list[int] = []
+    log = []
+    for verb, arg in trace:
+        if verb == "alloc":
+            pid = pool_ops.alloc()
+            if pid is not None:
+                held.append(pid)
+            log.append(("alloc", pid, pid is not None))
+        elif verb == "ref_add":
+            if not held:
+                continue
+            pid = held[arg % len(held)]
+            pool_ops.ref_add(pid)
+            held.append(pid)
+            log.append(("ref_add", pid, True))
+        elif verb == "release_raw":
+            # raw page-id release, holdings ignored: the ONLY way a trace
+            # can be illegal — used to seed the shrinking tests
+            log.append(("release_raw", arg, pool_ops.release(arg)))
+        else:
+            if not held:
+                continue
+            pid = held.pop(arg % len(held))
+            freed = pool_ops.release(pid)
+            log.append(("release", pid, freed))
+    return log
+
+
+class _PoolAdapter:
+    """Uniform (alloc/ref_add/release) facade over HostPagePool."""
+
+    def __init__(self, pool: heap.HostPagePool, origin: int = 0):
+        self.pool, self.origin = pool, origin
+
+    def alloc(self):
+        return self.pool.alloc(origin=self.origin)
+
+    def ref_add(self, pid):
+        self.pool.ref_add(pid, 1, origin=self.origin)
+
+    def release(self, pid):
+        return self.pool.release(pid, origin=self.origin)
+
+
+# --------------------------------------------------------------- the shrinker
+def shrink_trace(trace, fails):
+    """Delta-debugging: greedily drop chunks while the predicate still
+    fails; returns a (locally) minimal failing trace."""
+    assert fails(trace), "shrink_trace needs a failing trace to start from"
+    changed = True
+    while changed:
+        changed = False
+        k = max(1, len(trace) // 2)
+        while k >= 1:
+            i = 0
+            while i < len(trace):
+                cand = trace[:i] + trace[i + k:]
+                if cand != trace and fails(cand):
+                    trace = cand
+                    changed = True
+                else:
+                    i += k
+            k //= 2
+    return trace
+
+
+# ===================================================================== tests
+class TestSequentialOracle:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 100_000), st.integers(10, 120))
+    def test_random_traces_match_oracle_exactly(self, seed, n_ops):
+        trace = gen_trace(seed, n_ops)
+        pool = heap.HostPagePool(8)
+        oracle = SeqOracle(8)
+        log_pool = run_trace(_PoolAdapter(pool), trace)
+        log_oracle = run_trace(oracle, trace)
+        # byte-for-byte: same page ids, same freed flags, same dry allocs
+        assert log_pool == log_oracle
+        assert pool.conservation() == oracle.conservation()
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 100_000))
+    def test_oracle_agreement_survives_pool_exhaustion(self, seed):
+        trace = gen_trace(seed, 60, p_alloc=0.9)   # hammer the dry path
+        pool = heap.HostPagePool(3)
+        assert run_trace(_PoolAdapter(pool), trace) == run_trace(SeqOracle(3), trace)
+        assert pool.conservation()["free_plus_live"] == 3
+
+
+class TestThreadedFuzz:
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_n_threads_random_traces_conserve(self, seed):
+        """4 threads × 250 random legal ops on one pool: every interleaving
+        must conserve pages, keep per-thread holdings consistent, and never
+        raise for a legal trace."""
+        n_threads, n_pages = 4, 16
+        pool = heap.HostPagePool(n_pages)
+        errors: list = []
+        held_per_thread: list[list[int]] = [[] for _ in range(n_threads)]
+
+        def worker(tid: int):
+            rng = np.random.RandomState(seed * 31 + tid)
+            held = held_per_thread[tid]
+            try:
+                for _ in range(250):
+                    roll = rng.rand()
+                    if roll < 0.5 or not held:
+                        pid = pool.alloc(origin=tid)
+                        if pid is not None:
+                            held.append(pid)
+                    elif roll < 0.7:
+                        pid = held[rng.randint(len(held))]
+                        pool.ref_add(pid, 1, origin=tid)
+                        held.append(pid)
+                    else:
+                        pid = held.pop(rng.randint(len(held)))
+                        pool.release(pid, origin=tid)
+            except Exception as e:   # noqa: BLE001 — surfaced after join
+                errors.append((tid, e))
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, f"legal concurrent trace raised: {errors}"
+        cons = pool.conservation()
+        assert cons["free_plus_live"] == n_pages
+        # the held multiset is the ground truth for live refcounts
+        held_count: dict[int, int] = {}
+        for held in held_per_thread:
+            for pid in held:
+                held_count[pid] = held_count.get(pid, 0) + 1
+        for pid in range(n_pages):
+            assert pool.ref[pid].v == held_count.get(pid, 0), (
+                f"page {pid}: pool refcount {pool.ref[pid].v} != "
+                f"threads' holdings {held_count.get(pid, 0)}")
+        assert pool.allocs - pool.frees == cons["live"]
+
+    def test_threaded_alloc_is_exactly_once(self):
+        """The same page id must never be handed to two concurrent allocs
+        (the CAS pop race): allocate the whole pool from 8 threads and
+        check the ids partition exactly."""
+        pool = heap.HostPagePool(64)
+        got: list[list[int]] = [[] for _ in range(8)]
+
+        def worker(tid: int):
+            while True:
+                pid = pool.alloc(origin=tid)
+                if pid is None:
+                    return
+                got[tid].append(pid)
+
+        threads = [threading.Thread(target=worker, args=(t,)) for t in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        all_ids = [pid for ids in got for pid in ids]
+        assert sorted(all_ids) == list(range(64))  # no dup, no loss
+        assert pool.conservation()["live"] == 64
+
+
+class TestShrinking:
+    def _fails(self, trace) -> bool:
+        pool = heap.HostPagePool(8)
+        try:
+            run_trace(_PoolAdapter(pool), trace)
+        except heap.HeapError:
+            return True
+        return False
+
+    def test_shrinks_injected_double_free_to_minimal_trace(self):
+        """A 118-op trace with one buried protocol violation shrinks to the
+        minimal reproduction: a single release of a dead page."""
+        trace = (gen_trace(3, 60)
+                 + [("release", 0)] * 80          # drain every held ref...
+                 + [("release_raw", 0)]           # ...then free a dead page
+                 + gen_trace(4, 30))
+        assert self._fails(trace)
+        small = shrink_trace(trace, self._fails)
+        assert self._fails(small)
+        assert small == [("release_raw", 0)], f"not minimal: {small}"
+        with pytest.raises(heap.HeapError, match="double free"):
+            run_trace(_PoolAdapter(heap.HostPagePool(8)), small)
+
+    def test_shrinker_requires_a_failing_seed(self):
+        with pytest.raises(AssertionError):
+            shrink_trace([("alloc", None)], self._fails)
