@@ -30,13 +30,16 @@ sim-smoke:
 	$(PYTHON) -m repro.sim.conformance --ranks 64 --schedules tear \
 		--protocols queue,epoch --seeds 0 --expect-fail
 
-# the nightly sweep: 256 ranks, many seeds (override SEED_BASE/SWEEP in CI)
+# the nightly sweep: 256 ranks, many seeds (override SEED_BASE/SWEEP in CI);
+# failing runs export replay-exact Perfetto traces into TRACE_DIR (§12)
 SEED_BASE ?= 0
 SWEEP ?= 10
+TRACE_DIR ?= sim-traces
 sim-chaos:
 	$(PYTHON) -m repro.sim.conformance --ranks 256 --sweep $(SWEEP) \
 		--seed-base $(SEED_BASE) \
-		--protocols queue,flow,heap,epoch,lock,kv
+		--protocols queue,flow,heap,epoch,lock,kv \
+		--trace-dir $(TRACE_DIR)
 	$(PYTHON) -m repro.sim.conformance --ranks 256 --schedules tear \
 		--protocols queue,epoch --sweep $(SWEEP) --seed-base $(SEED_BASE) \
 		--expect-fail

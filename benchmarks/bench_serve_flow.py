@@ -43,6 +43,8 @@ def run_engines(n: int) -> dict:
                               else float(v))
                           for k, v in eng.msg_stats.items()
                           if isinstance(v, (int, float, np.integer, np.floating))},
+            # request-lifecycle latency summaries (§12): TTFT/TBT in µs
+            "metrics": eng.serve_metrics(),
         }
     return out
 

@@ -150,7 +150,21 @@ def emit_trajectory(root: str, path: str = "BENCH_trajectory.json") -> dict:
         except (OSError, json.JSONDecodeError):
             series = []
     series = [e for e in series if e.get("commit") != commit]
-    series.append({"commit": commit, "benches": benches})
+    entry = {"commit": commit, "benches": benches}
+    # latency trajectory (§12): roll the serve benches' TTFT/TBT summaries
+    # up to a flat per-commit metrics block so p50/p99 diffs across PRs
+    # don't require digging through nested bench JSON
+    metrics = {}
+    sf = benches.get("BENCH_serve_flow") or {}
+    for mode, e in (sf.get("serve_engine") or {}).items():
+        for hist, summ in (e.get("metrics") or {}).items():
+            if isinstance(summ, dict):
+                for q in ("p50", "p99"):
+                    if q in summ:
+                        metrics[f"serve.{mode}.{hist}.{q}"] = summ[q]
+    if metrics:
+        entry["metrics"] = metrics
+    series.append(entry)
     out = {"series": series}
     with open(out_path, "w") as fh:
         json.dump(out, fh, indent=2)
@@ -180,6 +194,10 @@ def main() -> None:
     if failures:
         # do NOT fold stale JSON into the trajectory under this commit
         raise SystemExit(f"{failures} benchmarks failed")
+    # model-vs-measured drift gate (§12): every deterministic wire-transfer
+    # count the PerfModel predicts must match what the benchmarks measured
+    from repro.obs import drift
+    drift.gate(root, json_path=os.path.join(root, "BENCH_drift.json"))
     emit_trajectory(root)
 
 

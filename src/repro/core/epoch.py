@@ -38,6 +38,9 @@ from typing import Any, ClassVar, Optional, Sequence
 import jax
 from jax import lax
 
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import snapshot_delta
+
 from .perfmodel import DEFAULT_MODEL, PerfModel
 from .rma import OpCounter
 
@@ -90,6 +93,12 @@ class SyncStats:
             f.name: getattr(self, f.name)
             for f in dataclasses.fields(self)
         }
+
+    def delta(self, prev) -> dict:
+        """Snapshot diff against `prev` (a snapshot dict or a SyncStats)."""
+        if hasattr(prev, "snapshot"):
+            prev = prev.snapshot()
+        return snapshot_delta(self.snapshot(), prev)
 
     @classmethod
     def record(cls, field: str, n: int = 1,
@@ -147,6 +156,9 @@ class FenceEpoch(_PlanScope):
         self.stats = SyncStats()
 
     def open(self, tree: Any) -> Any:
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("epoch.fence.open", axis=self.axis, p=self.p)
         return _barrier_all(tree)
 
     def close(self, tree: Any) -> Any:
@@ -155,9 +167,12 @@ class FenceEpoch(_PlanScope):
         # scalar psum on the axis.
         import math
 
-        self._flush_plan()
-        tree = _barrier_all(tree)
-        self.stats.barrier_stages += max(1, int(math.ceil(math.log2(max(self.p, 2)))))
+        with obs_trace.TRACER.span("epoch.fence.close", axis=self.axis, p=self.p) as sp:
+            self._flush_plan()
+            tree = _barrier_all(tree)
+            self.stats.barrier_stages += max(1, int(math.ceil(math.log2(max(self.p, 2)))))
+            sp.set(raw=self.stats.raw_msgs, coalesced=self.stats.coalesced_msgs,
+                   barrier_stages=self.stats.barrier_stages)
         return tree
 
     def predicted_cost(self) -> float:
@@ -186,6 +201,9 @@ class PSCWEpoch(_PlanScope):
 
     # exposure side
     def post(self, tree: Any) -> Any:
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("epoch.pscw.post", axis=self.axis, k=self.k)
         self.stats.post_msgs += self.k  # one announce per access-group member
         return _barrier_all(tree)
 
@@ -199,9 +217,11 @@ class PSCWEpoch(_PlanScope):
         return _barrier_all(tree)
 
     def complete(self, tree: Any) -> Any:
-        self._flush_plan()
-        self.stats.complete_msgs += self.k  # completion-counter increments
-        return _barrier_all(tree)
+        with obs_trace.TRACER.span("epoch.pscw.complete", axis=self.axis, k=self.k) as sp:
+            self._flush_plan()
+            self.stats.complete_msgs += self.k  # completion-counter increments
+            sp.set(raw=self.stats.raw_msgs, coalesced=self.stats.coalesced_msgs)
+            return _barrier_all(tree)
 
     def predicted_cost(self) -> float:
         return self.model.p_pscw(self.k)
@@ -225,15 +245,20 @@ class SharedLockEpoch(_PlanScope):
         self.stats = SyncStats()
 
     def lock(self, tree: Any) -> Any:
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("epoch.lock.open", axis=self.axis)
         self.locked = True
         OpCounter.record("accs")  # one remote atomic increment
         return _barrier_all(tree)
 
     def unlock(self, tree: Any) -> Any:
-        self._flush_plan()
-        self.locked = False
-        OpCounter.record("accs")  # one remote atomic decrement
-        return _barrier_all(tree)
+        with obs_trace.TRACER.span("epoch.lock.close", axis=self.axis) as sp:
+            self._flush_plan()
+            self.locked = False
+            OpCounter.record("accs")  # one remote atomic decrement
+            sp.set(raw=self.stats.raw_msgs, coalesced=self.stats.coalesced_msgs)
+            return _barrier_all(tree)
 
     def predicted_cost(self) -> float:
         return self.model.p_lock_shared() + self.model.p_unlock()
@@ -250,12 +275,18 @@ def flush(tree: Any, stats: Optional[SyncStats] = None) -> Any:
     semaphore wait).  Records one flush message into the active `SyncStats`
     ledger (and `stats` when given) so sync accounting sees it.
     """
+    tr = obs_trace.TRACER
+    if tr.enabled:
+        tr.event("sync.flush")
     SyncStats.record("flush_msgs", also=stats)
     return _barrier_all(tree)
 
 
 def flush_local(tree: Any, stats: Optional[SyncStats] = None) -> Any:
     """MPI_Win_flush_local: local buffer reuse safety — same lowering."""
+    tr = obs_trace.TRACER
+    if tr.enabled:
+        tr.event("sync.flush_local")
     SyncStats.record("flush_local_msgs", also=stats)
     return _barrier_all(tree)
 

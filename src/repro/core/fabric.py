@@ -43,6 +43,9 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import snapshot_delta
+
 from .epoch import SyncStats
 from .locks_sim import _AtomicWord
 from .rma import OpCounter
@@ -104,12 +107,26 @@ class Fabric:
         except KeyError:
             raise FabricError(f"unknown bank {bank!r}") from None
 
-    def _count(self, kind: str, n: int = 1) -> None:
+    def _count(self, kind: str, n: int = 1, src: int = -1, dst: int = -1,
+               region: str = "") -> None:
         """Shared payload-op accounting: one logical op == one wire transfer
-        (both fabrics MUST stay byte-identical here — the diff tests pin it)."""
+        (both fabrics MUST stay byte-identical here — the diff tests pin it).
+        `src`/`dst`/`region` are trace-only attribution and never touch the
+        ledger."""
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("fabric.op", rank=src, kind=kind, n=n, dst=dst,
+                     region=region)
         setattr(self.ops, kind, getattr(self.ops, kind) + n)
         self.ops.raw_msgs += n
         self.ops.coalesced_msgs += n
+
+    def _count_amo(self, op: str, src: int, bank: str, i: int) -> None:
+        """Trace-only AMO attribution (the ledger stays on the words'
+        ``amo_count``, exactly as before the fabric seam)."""
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("fabric.amo", rank=src, op=op, bank=bank, i=i)
 
     def _account_fence(self) -> None:
         """Shared fence accounting: epoch advance + O(log p) barrier stages
@@ -118,6 +135,9 @@ class Fabric:
 
         self.epoch += 1
         self.sync.barrier_stages += max(1, int(math.ceil(math.log2(max(self.p, 2)))))
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("fabric.fence", rank=-1, epoch=self.epoch)
 
     # --------------------------------------------------------- inspection
     def snapshot(self) -> dict:
@@ -126,6 +146,12 @@ class Fabric:
         out.update({f"sync_{k}": v for k, v in self.sync.snapshot().items()})
         out["epoch"] = self.epoch
         return out
+
+    def delta(self, prev) -> dict:
+        """Snapshot diff against `prev` (a snapshot dict or a Fabric)."""
+        if hasattr(prev, "snapshot"):
+            prev = prev.snapshot()
+        return snapshot_delta(self.snapshot(), prev)
 
 
 class LocalFabric(Fabric):
@@ -140,11 +166,11 @@ class LocalFabric(Fabric):
     # ----------------------------------------------------------- regions
     def put(self, src: int, dst: int, region: str, idx, value) -> None:
         self._store(region)[dst][idx] = value
-        self._count("puts")
+        self._count("puts", src=src, dst=dst, region=region)
 
     def add(self, src: int, dst: int, region: str, idx, delta) -> None:
         apply_add(self._store(region)[dst], idx, delta)
-        self._count("accs")
+        self._count("accs", src=src, dst=dst, region=region)
 
     def fence_add(self, dst: int, region: str, idx, delta) -> None:
         """Accumulate ordered after this epoch's one-way ops to `dst`
@@ -154,28 +180,34 @@ class LocalFabric(Fabric):
 
     def get(self, src: int, dst: int, region: str, idx=()):
         out = self._store(region)[dst][idx] if idx != () else self._store(region)[dst]
-        self._count("gets")
+        self._count("gets", src=src, dst=dst, region=region)
         return np.copy(out)
 
     def gather(self, src: int, region: str):
         """Window-wide read (the reservation gather): one fused transfer."""
-        self._count("gets")
+        self._count("gets", src=src, region=region)
         return np.copy(self._store(region))
 
     # -------------------------------------------------------------- AMOs
     # AMO accounting lives on the words themselves (``amo_count``), exactly
     # as before the fabric seam — `HostPagePool.total_amos` is unchanged.
     def read_word(self, src: int, bank: str, i: int) -> int:
+        self._count_amo("read", src, bank, i)
         return self._word(bank, i).read()
 
     def fetch_add(self, src: int, bank: str, i: int, delta: int) -> int:
+        self._count_amo("fetch_add", src, bank, i)
         return self._word(bank, i).fetch_add(delta)
 
     def cas(self, src: int, bank: str, i: int, expected: int, new: int) -> int:
+        self._count_amo("cas", src, bank, i)
         return self._word(bank, i).cas(expected, new)
 
     # -------------------------------------------------------------- sync
     def flush(self, src: int) -> None:
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("fabric.flush", rank=src)
         SyncStats.record("flush_msgs", also=self.sync)
 
     def flush_remote(self, src: int) -> None:

@@ -21,6 +21,8 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from repro.obs import trace as obs_trace
+
 
 WRITER_BIT = 1 << 63
 GLOBAL_EXCL_UNIT = 1 << 32
@@ -34,7 +36,17 @@ DEFAULT_MAX_RETRIES = 30_000
 
 
 class LockTimeout(RuntimeError):
-    """A lock acquisition exhausted its retry bound (likely deadlock)."""
+    """A lock acquisition exhausted its retry bound (likely deadlock).
+
+    Carries how long the origin waited (`wait_s`, wall seconds) and how many
+    acquisition attempts it made (`attempts`) alongside the held-state dump
+    in the message — the same fields the tracer surfaces as span attributes
+    on the ``lock.timeout`` event."""
+
+    def __init__(self, message: str, wait_s: float = 0.0, attempts: int = 0):
+        super().__init__(message)
+        self.wait_s = wait_s
+        self.attempts = attempts
 
 
 def _held_state(win: "LockWindow", target: int | None = None) -> str:
@@ -114,6 +126,35 @@ class LockOrigin:
         self.rank = rank
         self.excl_held = 0  # nesting count of exclusive locks held
 
+    def _timeout(self, op: str, target: int | None, t0: float,
+                 attempts: int) -> LockTimeout:
+        """Build the satellite diagnostics: wait duration + attempt count
+        alongside the held-rank dump, mirrored onto the tracer as a
+        ``lock.timeout`` event (span attributes in the exported trace)."""
+        wait_s = time.perf_counter() - t0
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("lock.timeout", rank=self.rank, op=op,
+                     target=-1 if target is None else target,
+                     wait_us=int(wait_s * 1e6), attempts=attempts)
+        where = "" if target is None else str(target)
+        return LockTimeout(
+            f"rank {self.rank}: {op}({where}) gave up after {attempts} "
+            f"retries ({wait_s * 1e3:.2f} ms waiting) — "
+            f"{_held_state(self.win, target)}",
+            wait_s=wait_s, attempts=attempts,
+        )
+
+    def _contended(self, op: str, target: int | None, t0: float,
+                   attempts: int) -> None:
+        """Trace a success that needed retries (contention visibility)."""
+        tr = obs_trace.TRACER
+        if tr.enabled and attempts > 1:
+            tr.event("lock.contended", rank=self.rank, op=op,
+                     target=-1 if target is None else target,
+                     wait_us=int((time.perf_counter() - t0) * 1e6),
+                     attempts=attempts)
+
     # ------------------------------------------------------------- shared
     def lock_shared(self, target: int, backoff: float = 1e-6,
                     max_retries: int = DEFAULT_MAX_RETRIES) -> None:
@@ -122,18 +163,17 @@ class LockOrigin:
         Bounded busy-wait: raises `LockTimeout` (with the held lock words)
         after `max_retries` failed attempts instead of spinning forever.
         """
-        for _ in range(max_retries):
+        t0 = time.perf_counter()
+        for attempt in range(1, max_retries + 1):
             old = self.win.local[target].fetch_add(1)
             if not (old & WRITER_BIT):
+                self._contended("lock_shared", target, t0, attempt)
                 return  # acquired
             # writer active: back off and retry (paper: remote reads + backoff)
             self.win.local[target].fetch_add(-1)
             time.sleep(backoff)
             backoff = min(backoff * 2, 1e-3)
-        raise LockTimeout(
-            f"rank {self.rank}: lock_shared({target}) gave up after "
-            f"{max_retries} retries — {_held_state(self.win, target)}"
-        )
+        raise self._timeout("lock_shared", target, t0, max_retries)
 
     def unlock_shared(self, target: int) -> None:
         self.win.local[target].fetch_add(-1)
@@ -146,7 +186,8 @@ class LockOrigin:
         Bounded busy-wait (both invariants share one retry budget): raises
         `LockTimeout` with the held lock words instead of spinning forever.
         """
-        for _ in range(max_retries):
+        t0 = time.perf_counter()
+        for attempt in range(1, max_retries + 1):
             # Invariant 1 — register wish for exclusive lock at the master.
             if self.excl_held == 0:
                 old = self.win.master.fetch_add(GLOBAL_EXCL_UNIT)
@@ -161,16 +202,14 @@ class LockOrigin:
             if old == 0:
                 self.win.holder[target] = self.rank   # diagnostics (§ timeout)
                 self.excl_held += 1
+                self._contended("lock_exclusive", target, t0, attempt)
                 return
             # failed: release global registration and retry both invariants
             if self.excl_held == 0:
                 self.win.master.fetch_add(-GLOBAL_EXCL_UNIT)
             time.sleep(backoff)
             backoff = min(backoff * 2, 1e-3)
-        raise LockTimeout(
-            f"rank {self.rank}: lock_exclusive({target}) gave up after "
-            f"{max_retries} retries — {_held_state(self.win, target)}"
-        )
+        raise self._timeout("lock_exclusive", target, t0, max_retries)
 
     def unlock_exclusive(self, target: int) -> None:
         self.win.holder[target] = -1
@@ -186,17 +225,16 @@ class LockOrigin:
 
         Bounded busy-wait: raises `LockTimeout` with the held lock words
         after `max_retries` failed attempts."""
-        for _ in range(max_retries):
+        t0 = time.perf_counter()
+        for attempt in range(1, max_retries + 1):
             old = self.win.master.fetch_add(1)
             if old < GLOBAL_EXCL_UNIT:  # no exclusive holders
+                self._contended("lock_all", None, t0, attempt)
                 return
             self.win.master.fetch_add(-1)
             time.sleep(backoff)
             backoff = min(backoff * 2, 1e-3)
-        raise LockTimeout(
-            f"rank {self.rank}: lock_all() gave up after {max_retries} "
-            f"retries — {_held_state(self.win)}"
-        )
+        raise self._timeout("lock_all", None, t0, max_retries)
 
     def unlock_all(self) -> None:
         self.win.master.fetch_add(-1)

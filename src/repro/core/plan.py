@@ -47,6 +47,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import snapshot_delta
 
 from .perfmodel import DEFAULT_MODEL, PerfModel
 from .rma import OpCounter
@@ -157,6 +159,26 @@ class PlanStats:
     def aggregation_factor(self) -> float:
         return self.raw / self.coalesced if self.coalesced else 1.0
 
+    def snapshot(self) -> dict:
+        """Fingerprint in the shared ledger schema (§12): same raw/coalesced
+        key naming as OpCounter/SyncStats so the metrics registry ingests it
+        without an adapter."""
+        return {
+            "raw_msgs": self.raw,
+            "coalesced_msgs": self.coalesced,
+            "groups": self.groups,
+            "packed_groups": self.packed_groups,
+            "bytes_logical": self.bytes_logical,
+            "bytes_wire": self.bytes_wire,
+            "backends": dict(sorted(self.backends.items())),
+        }
+
+    def delta(self, prev) -> dict:
+        """Snapshot diff against `prev` (a snapshot dict or a PlanStats)."""
+        if hasattr(prev, "snapshot"):
+            prev = prev.snapshot()
+        return snapshot_delta(self.snapshot(), prev)
+
 
 # --------------------------------------------------------- backend selection
 Backend = Literal["xla", "pallas", "interpret"]
@@ -234,6 +256,10 @@ class RmaPlan:
     def _record(self, kind, sig, payload, finalize=None, shift=None) -> RmaHandle:
         if self.flushed:
             raise PlanError("plan already flushed")
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("plan.record", axis=self.axis, kind=kind or "rider",
+                     sig=sig[0])
         h = RmaHandle()
         self.ops.append(
             _RecordedOp(kind, sig, self.axis, payload, h,
@@ -357,6 +383,18 @@ class RmaPlan:
         backend: "auto" consults `choose_backend` (or the strategist), else
         one of "xla" | "pallas" | "interpret" forced for every group.
         """
+        tr = obs_trace.TRACER
+        if not tr.enabled:
+            return self._flush_impl(aggregate, backend)
+        with tr.span("plan.flush", axis=self.axis, pending=len(self.ops)) as sp:
+            stats = self._flush_impl(aggregate, backend)
+            sp.set(raw=stats.raw, coalesced=stats.coalesced,
+                   groups=stats.groups, packed_groups=stats.packed_groups,
+                   bytes_wire=stats.bytes_wire)
+            return stats
+
+    def _flush_impl(self, aggregate: Optional[bool],
+                    backend: str) -> PlanStats:
         if self.flushed:
             raise PlanError("plan already flushed")
         self.flushed = True

@@ -40,6 +40,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import snapshot_delta
 
 
 Array = jax.Array
@@ -263,9 +265,18 @@ class OpCounter:
             "by_axis": {a: dict(sorted(k.items())) for a, k in sorted(self.by_axis.items())},
         }
 
+    def delta(self, prev) -> dict:
+        """Snapshot diff against `prev` (a snapshot dict or an OpCounter)."""
+        if hasattr(prev, "snapshot"):
+            prev = prev.snapshot()
+        return snapshot_delta(self.snapshot(), prev)
+
     @classmethod
     def record(cls, kind: str, n: int = 1, axis: str | None = None) -> None:
         """Eager-path record: one logical op == one wire transfer."""
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("rma.op", kind=kind, n=n, axis=axis or "")
         for c in cls._active:
             setattr(c, kind, getattr(c, kind) + n)
             c.raw_msgs += n
@@ -284,6 +295,9 @@ class OpCounter:
     ) -> None:
         """Plan-flush record: attribute each recorded op to its originating
         kind (the raw count), and account wire transfers separately."""
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("rma.plan", raw=raw, coalesced=coalesced)
         for c in cls._active:
             for (kind, axis), n in kinds.items():
                 setattr(c, kind, getattr(c, kind) + n)

@@ -1,0 +1,16 @@
+"""repro.obs: span tracing, metrics registry, Perfetto export, drift gating.
+
+Layering: `obs.trace` and `obs.metrics` sit *below* `repro.core` (they import
+nothing from it) so instrumented hot paths can reach the global tracer with a
+plain module-attribute lookup.  `obs.export` depends only on `obs.trace`;
+`obs.drift` is the one module allowed to look upward (it reads
+`core.perfmodel` predictions) and is imported only by benchmarks and tests.
+"""
+
+from repro.obs.trace import (  # noqa: F401
+    NULL_TRACER,
+    NullTracer,
+    Tracer,
+    get_tracer,
+    set_tracer,
+)

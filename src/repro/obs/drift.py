@@ -1,0 +1,211 @@
+"""Model-vs-measured drift harness over the smoke benchmarks (§12).
+
+The paper ships "a spectrum of performance models for all critical
+functions"; this module closes the loop by checking what `core.perfmodel`
+*predicts* against what the ledgers *observed* in each ``BENCH_*.json``.
+Every entry is ``{bench, metric, predicted, observed, tol, gate}``:
+
+  * **Gated counts** (``gate=True``, ``tol=COUNT_TOL``) — wire-transfer and
+    message counts.  The deferred substrate is deterministic, so the model's
+    structural predictions (k raw messages coalesce to 1 packed transfer; a
+    fused enqueue/append is exactly 2 wire transfers) must hold *exactly*:
+    the stated tolerance is 0.  `make bench-smoke` fails on any violation —
+    a protocol change that silently grows the wire count can't land.
+  * **Informational rates** (``gate=False``, ``tol=RATE_TOL``) — modeled vs
+    measured message rates.  Wall-clock numbers on shared CI runners are
+    noisy; these rows appear in the report (and GITHUB_STEP_SUMMARY) so a
+    human can watch the trend, but they do not gate.
+
+Run standalone: ``python -m repro.obs.drift --root .`` (exit 1 on drift).
+`benchmarks/run.py` invokes `gate()` after the smoke benches, writes
+``BENCH_drift.json`` (folded into the trajectory), and appends the table to
+``$GITHUB_STEP_SUMMARY`` when CI provides one.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+# Stated tolerances (the acceptance criterion's "stated tolerance"):
+# deterministic transfer counts must match the model exactly; measured
+# wall-clock rates may drift two orders of magnitude on shared runners
+# before we even flag them informationally.
+COUNT_TOL = 0.0
+RATE_TOL = 100.0
+
+# The §6/§9/§10 fused protocols (queue enqueue, credit send, inline and
+# paged KV append) are all "one reservation gather + one payload scatter":
+# the model charges every fused append exactly this many wire transfers
+# (see PerfModel.p_queue_enqueue / p_enqueue_credit / p_append_paged).
+WIRE_TRANSFERS_PER_FUSED_APPEND = 2
+
+
+def _entry(bench: str, metric: str, predicted: float, observed: float,
+           tol: float = COUNT_TOL, gate: bool = True) -> dict:
+    pred = float(predicted)
+    obs = float(observed)
+    denom = max(abs(pred), 1e-12)
+    rel_err = abs(obs - pred) / denom
+    return {
+        "bench": bench,
+        "metric": metric,
+        "predicted": pred,
+        "observed": obs,
+        "rel_err": rel_err,
+        "tol": tol,
+        "gate": gate,
+        "ok": rel_err <= tol,
+    }
+
+
+def _load(root: str, name: str) -> Optional[dict]:
+    path = os.path.join(root, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _collect_rma_plan(doc: dict) -> list[dict]:
+    from repro.core.perfmodel import DEFAULT_MODEL
+
+    k = int(doc["k_msgs"])
+    msg_bytes = float(doc["msg_bytes"])
+    packed = DEFAULT_MODEL.select_aggregation(k, msg_bytes) == "pack"
+    return [
+        _entry("rma_plan", "eager.raw_msgs", k, doc["eager"]["raw_msgs"]),
+        _entry("rma_plan", "eager.wire_transfers", k,
+               doc["eager"]["wire_transfers"]),
+        _entry("rma_plan", "coalesced.raw_msgs", k,
+               doc["coalesced"]["raw_msgs"]),
+        _entry("rma_plan", "coalesced.wire_transfers", 1 if packed else k,
+               doc["coalesced"]["wire_transfers"]),
+    ]
+
+
+def _collect_serve_flow(doc: dict) -> list[dict]:
+    out = []
+    for scheme in ("retry", "credit"):
+        qb = doc.get("queue_backpressure", {}).get(scheme)
+        if qb is not None:
+            out.append(_entry(
+                "serve_flow", f"queue.{scheme}.wire_transfers_per_append",
+                WIRE_TRANSFERS_PER_FUSED_APPEND,
+                qb["wire_transfers_per_append"]))
+            modeled = doc.get("model", {}).get("modeled_msg_rate_per_s")
+            if modeled and "measured_msg_rate_per_s" in qb:
+                out.append(_entry(
+                    "serve_flow", f"queue.{scheme}.msg_rate_per_s",
+                    modeled, qb["measured_msg_rate_per_s"],
+                    tol=RATE_TOL, gate=False))
+        eng = doc.get("serve_engine", {}).get(scheme)
+        if eng is not None:
+            out.append(_entry(
+                "serve_flow", f"engine.{scheme}.wire_msgs_per_step",
+                WIRE_TRANSFERS_PER_FUSED_APPEND,
+                eng["msg_stats"]["wire_msgs_per_step"]))
+    # credit flow control exists to make this count structural, not lucky
+    credit = doc.get("serve_engine", {}).get("credit")
+    if credit is not None:
+        out.append(_entry("serve_flow", "engine.credit.retries", 0,
+                          credit["retries"]))
+    return out
+
+
+def _collect_rmem(doc: dict) -> list[dict]:
+    out = []
+    for mode in ("inline", "paged"):
+        d = doc.get(mode)
+        if d is not None and "wire_transfers_per_append" in d:
+            out.append(_entry(
+                "rmem", f"{mode}.wire_transfers_per_append",
+                WIRE_TRANSFERS_PER_FUSED_APPEND,
+                d["wire_transfers_per_append"]))
+    return out
+
+
+def collect(root: str = ".") -> list[dict]:
+    """Gather drift entries from every smoke-bench JSON present in `root`."""
+    entries: list[dict] = []
+    for name, fn in (
+        ("BENCH_rma_plan.json", _collect_rma_plan),
+        ("BENCH_serve_flow.json", _collect_serve_flow),
+        ("BENCH_rmem.json", _collect_rmem),
+    ):
+        doc = _load(root, name)
+        if doc is not None:
+            entries.extend(fn(doc))
+    return entries
+
+
+def format_table(entries: list[dict]) -> str:
+    """Markdown model-vs-measured table (for stdout and step summaries)."""
+    lines = [
+        "| bench | metric | predicted | observed | rel err | tol | gate | ok |",
+        "|---|---|---:|---:|---:|---:|---|---|",
+    ]
+    for e in entries:
+        lines.append(
+            f"| {e['bench']} | {e['metric']} | {e['predicted']:g} "
+            f"| {e['observed']:g} | {e['rel_err']:.3g} | {e['tol']:g} "
+            f"| {'yes' if e['gate'] else 'info'} "
+            f"| {'OK' if e['ok'] else 'DRIFT'} |")
+    return "\n".join(lines)
+
+
+def violations(entries: list[dict]) -> list[dict]:
+    return [e for e in entries if e["gate"] and not e["ok"]]
+
+
+def write_json(entries: list[dict], path: str) -> None:
+    bad = violations(entries)
+    with open(path, "w") as f:
+        json.dump({"entries": entries, "violations": len(bad),
+                   "count_tol": COUNT_TOL, "rate_tol": RATE_TOL},
+                  f, indent=2)
+        f.write("\n")
+
+
+def gate(root: str = ".", json_path: Optional[str] = None) -> list[dict]:
+    """Collect, report, persist; raise SystemExit on gated drift."""
+    entries = collect(root)
+    table = format_table(entries)
+    print("# model-vs-measured drift", flush=True)
+    print(table, flush=True)
+    if json_path:
+        write_json(entries, json_path)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        try:
+            with open(summary, "a") as f:
+                f.write("### Model-vs-measured drift\n\n" + table + "\n")
+        except OSError:
+            pass
+    bad = violations(entries)
+    if bad:
+        names = ", ".join(f"{e['bench']}:{e['metric']}" for e in bad)
+        raise SystemExit(
+            f"model-vs-measured drift beyond tolerance on {len(bad)} "
+            f"metric(s): {names}")
+    return entries
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=".", help="directory with BENCH_*.json")
+    ap.add_argument("--json", default=None, help="write BENCH_drift.json here")
+    args = ap.parse_args(argv)
+    try:
+        gate(args.root, args.json)
+    except SystemExit as e:
+        print(e, flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,80 @@
+"""Exporters: Chrome-trace/Perfetto JSON and flat metrics JSON (§12).
+
+The trace format is the Chrome trace event JSON (`traceEvents` array), which
+Perfetto's UI (https://ui.perfetto.dev) opens directly: one process, one
+thread *track per rank* (tid = rank; the scheduler/control track renders as
+"control").  Spans are complete events (``ph: "X"``, ts + dur), instants are
+``ph: "i"`` with thread scope; span attributes land in ``args``.
+
+Byte-identical replays are a contract, not an accident: `dumps_chrome_trace`
+serializes with sorted keys and fixed separators, ranks are emitted in
+sorted order, and a virtual-clock trace contains no wall-time anywhere — so
+the same ``(seed, schedule)`` conformance run always produces the same
+bytes (tested in tests/test_obs.py).
+"""
+
+from __future__ import annotations
+
+import json
+
+# tid for the scheduler/control track (rank -1): rendered after real ranks
+_CONTROL_TID = 1_000_000
+
+
+def _tid(rank: int) -> int:
+    return _CONTROL_TID if rank < 0 else rank
+
+
+def chrome_trace(tracer, process_name: str = "repro") -> dict:
+    """Build a Chrome trace event document from a Tracer's buffer."""
+    events: list[dict] = [
+        {"ph": "M", "name": "process_name", "pid": 0, "tid": 0,
+         "args": {"name": process_name}},
+    ]
+    for rank in tracer.ranks():
+        label = "control" if rank < 0 else f"rank {rank}"
+        events.append({"ph": "M", "name": "thread_name", "pid": 0,
+                       "tid": _tid(rank), "args": {"name": label}})
+    for ev in tracer.events:
+        rec = {
+            "ph": ev["ph"],
+            "name": ev["name"],
+            "ts": ev["ts"],
+            "pid": 0,
+            "tid": _tid(ev["rank"]),
+            "args": ev["args"],
+        }
+        if ev["ph"] == "X":
+            rec["dur"] = ev["dur"]
+        elif ev["ph"] == "i":
+            rec["s"] = "t"  # thread-scoped instant
+        events.append(rec)
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "metadata": {"clock_domain": tracer.clock_domain},
+    }
+
+
+def dumps_chrome_trace(tracer, process_name: str = "repro") -> str:
+    """Canonical serialization — the unit of byte-identical replay."""
+    return json.dumps(chrome_trace(tracer, process_name),
+                      sort_keys=True, separators=(",", ":"))
+
+
+def dump_chrome_trace(tracer, path: str, process_name: str = "repro") -> str:
+    with open(path, "w") as f:
+        f.write(dumps_chrome_trace(tracer, process_name))
+    return path
+
+
+def metrics_json(registry) -> dict:
+    """Flat metrics document for benchmarks: ``{"metrics": {name: value}}``."""
+    return {"metrics": registry.flat()}
+
+
+def dump_metrics(registry, path: str) -> str:
+    with open(path, "w") as f:
+        json.dump(metrics_json(registry), f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

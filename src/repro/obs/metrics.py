@@ -1,0 +1,173 @@
+"""Labeled metrics registry over the repo's ledger snapshots (§12).
+
+The stack already measures everything the paper's models predict — OpCounter
+(message counts), SyncStats (synchronization traffic), PlanStats (coalescing),
+`Fabric.snapshot()` (the seam's combined view), flow/heap/chaos stat dicts —
+but as five separately-shaped dicts.  This registry gives them one home:
+
+  * `counter/gauge/histogram(name, **labels)` — get-or-create a metric keyed
+    by ``(kind, name, sorted labels)``, Prometheus-style.
+  * `ingest(prefix, snapshot, **labels)` — walk any of the snapshot dicts and
+    mirror every numeric leaf into a gauge named ``prefix.path.to.leaf``.
+    Nested dicts recurse (``rma.by_axis.w.puts``); lists (e.g. per-plan info
+    records) are skipped — they belong in the tracer, not the registry.
+  * `flat()` — deterministic flat ``{name{labels}: value}`` dict for JSON
+    export; histograms flatten to their summary stats.
+
+The shared schema is the snapshots' own key naming — `raw_msgs` /
+`coalesced_msgs` appear identically in OpCounter, SyncStats, PlanStats and
+`Fabric.snapshot()` (the latter prefixes sync fields with ``sync_``), so
+`ingest` needs no per-source adapters.  `snapshot_delta` is the common
+implementation behind each ledger's `delta(prev)` helper.
+"""
+
+from __future__ import annotations
+
+import numbers
+from typing import Optional
+
+
+def snapshot_delta(cur: dict, prev: Optional[dict]) -> dict:
+    """Recursive numeric difference of two snapshot dicts (cur - prev).
+
+    Keys present only in `cur` diff against 0; non-numeric leaves pass
+    through unchanged.  This is the shared engine behind the ledgers'
+    `delta(prev)` helpers (OpCounter, SyncStats, PlanStats, Fabric).
+    """
+    prev = prev or {}
+    out: dict = {}
+    for k, v in cur.items():
+        if isinstance(v, dict):
+            p = prev.get(k)
+            out[k] = snapshot_delta(v, p if isinstance(p, dict) else {})
+        elif isinstance(v, bool) or not isinstance(v, numbers.Number):
+            out[k] = v
+        else:
+            p = prev.get(k, 0)
+            out[k] = v - (p if isinstance(p, numbers.Number) else 0)
+    return out
+
+
+def _label_key(labels: dict) -> tuple:
+    return tuple(sorted(labels.items()))
+
+
+def _label_str(labels: tuple) -> str:
+    if not labels:
+        return ""
+    return "{" + ",".join(f"{k}={v}" for k, v in labels) + "}"
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n=1) -> None:
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def set(self, v) -> None:
+        self.value = v
+
+
+class Histogram:
+    """Value-retaining histogram with exact percentiles.
+
+    Runs are small (thousands of observations, not millions), so we keep the
+    raw values and compute exact order statistics — no bucket-boundary error
+    in the TTFT/TBT numbers the trajectory tracks per commit.
+    """
+
+    __slots__ = ("values",)
+
+    def __init__(self):
+        self.values: list[float] = []
+
+    def observe(self, v: float) -> None:
+        self.values.append(float(v))
+
+    def percentile(self, q: float) -> float:
+        """Exact q-th percentile (nearest-rank), q in [0, 100]."""
+        if not self.values:
+            return 0.0
+        xs = sorted(self.values)
+        rank = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
+        return xs[rank]
+
+    def summary(self) -> dict:
+        if not self.values:
+            return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                    "p50": 0.0, "p90": 0.0, "p99": 0.0}
+        xs = sorted(self.values)
+        return {
+            "count": len(xs),
+            "sum": sum(xs),
+            "min": xs[0],
+            "max": xs[-1],
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+        }
+
+
+class MetricsRegistry:
+    """Get-or-create registry of labeled counters/gauges/histograms."""
+
+    def __init__(self):
+        self._metrics: dict[tuple, object] = {}
+
+    def _get(self, kind: str, cls, name: str, labels: dict):
+        key = (kind, name, _label_key(labels))
+        m = self._metrics.get(key)
+        if m is None:
+            m = cls()
+            self._metrics[key] = m
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", Gauge, name, labels)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get("histogram", Histogram, name, labels)
+
+    # -------------------------------------------------------------- ingestion
+    def ingest(self, prefix: str, snapshot: dict, **labels) -> None:
+        """Mirror every numeric leaf of a snapshot dict into gauges.
+
+        Works unmodified on OpCounter/SyncStats/PlanStats/Fabric snapshots
+        and on the flow/heap/chaos stat dicts — the satellite-1 schema
+        unification means no per-source adapter code lives here.
+        """
+        for k, v in snapshot.items():
+            name = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, dict):
+                self.ingest(name, v, **labels)
+            elif isinstance(v, bool):
+                self.gauge(name, **labels).set(int(v))
+            elif isinstance(v, numbers.Number):
+                self.gauge(name, **labels).set(v)
+            # lists / strings: trace-side detail, not a metric
+
+    # ---------------------------------------------------------------- export
+    def flat(self) -> dict:
+        """Deterministic flat dict: ``name{labels}`` -> value/summary."""
+        out = {}
+        for (kind, name, labels) in sorted(self._metrics, key=lambda k: (k[1], k[2], k[0])):
+            m = self._metrics[(kind, name, labels)]
+            full = name + _label_str(labels)
+            if kind == "histogram":
+                out[full] = m.summary()
+            else:
+                out[full] = m.value
+        return out

@@ -57,6 +57,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.obs import trace as obs_trace
 
 from . import channel as rch
 from . import notify
@@ -211,6 +212,9 @@ def send(
     L = len(channel.lanes)
     me = lax.axis_index(axis)
     k = dest.shape[0]
+    tr = obs_trace.TRACER
+    if tr.enabled:  # trace-time: static shape attrs only
+        tr.event("flow.send_epoch", axis=axis, k=int(k), lane=name)
     if lane is None:
         lane = jnp.full((k,), channel.lane_id(name), jnp.int32)
     lane = lane.astype(jnp.int32)
@@ -345,6 +349,9 @@ class HostFlowChannel:
     def _refresh(self, src: int, dest: int) -> None:
         """One-sided get of dest's published grant row for this producer."""
         self.refreshes += 1
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("flow.refresh", rank=src, dest=dest)
         fresh = self.fabric.get(src, dest, self._granted_region, (src,))
         self.limit[src, dest] = np.maximum(self.limit[src, dest], fresh)
 
@@ -353,11 +360,18 @@ class HostFlowChannel:
         after a refresh) and the message stays with the caller — it never
         reaches the wire, so there is nothing to retry."""
         lane = self.ch._lane_id(name)
+        tr = obs_trace.TRACER
         if self.available(src, dest, lane) == 0:
             self._refresh(src, dest)                 # fall back: cache is dry
             if self.available(src, dest, lane) == 0:
                 self.deferred += 1
+                if tr.enabled:
+                    tr.event("flow.send", rank=src, dest=dest, lane=lane,
+                             outcome="deferred")
                 return False
+        if tr.enabled:
+            tr.event("flow.send", rank=src, dest=dest, lane=lane,
+                     outcome="credited")
         self.ch.send(src, name, payload, tag, dest)
         self.sent[src, dest, lane] += 1
         return True
@@ -369,6 +383,9 @@ class HostFlowChannel:
 
     def recv(self, rank: int, max_n: Optional[int] = None) -> list[dict]:
         msgs = self.ch.recv(rank, max_n)
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("flow.recv", rank=rank, n=len(msgs))
         for m in msgs:
             self.granted[rank, m["src"], self.ch._lane_id(m["lane"])] += 1
         return msgs

@@ -53,6 +53,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import plan as plan_mod
 from repro.core import window as window_mod
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 
@@ -200,6 +201,10 @@ def enqueue_epoch(
     p = compat.axis_size(axis)
     me = lax.axis_index(axis)
     k = dest.shape[0]
+    tr = obs_trace.TRACER
+    if tr.enabled:  # trace-time: static shape attrs only
+        tr.event("queue.enqueue_epoch", axis=axis, k=int(k), p=int(p),
+                 riders=len(reserve_riders))
     flat = msgs.reshape(k, desc.item_width).astype(desc.dtype)
 
     # out-of-range dests are treated as "no message" (never accepted), so the
@@ -312,6 +317,9 @@ def dequeue(
     local — no communication, no lock: head is consumer-private (§2.3
     passive-target analogue where the owner is the only reader).
     """
+    tr = obs_trace.TRACER
+    if tr.enabled:  # trace-time: static shape attrs only
+        tr.event("queue.dequeue", axis=desc.axis, max_n=int(max_n))
     n = jnp.minimum(available(state), max_n)
     offs = jnp.arange(max_n, dtype=jnp.uint32)
     valid = offs < n.astype(jnp.uint32)
@@ -383,6 +391,17 @@ class HostQueueGroup:
         every payload of this epoch (payload visible ⇒ notification
         visible, the §6.1 write-with-notification guarantee).
         """
+        tr = obs_trace.TRACER
+        if not tr.enabled:
+            return self._step_impl(sends)
+        with tr.span("queue.step", rank=-1, queue=self._name,
+                     producers=len(sends)) as sp:
+            accepted = self._step_impl(sends)
+            flat = [ok for flags in accepted.values() for ok in flags]
+            sp.set(accepted=sum(flat), rejected=len(flat) - sum(flat))
+            return accepted
+
+    def _step_impl(self, sends: dict[int, list[tuple[int, np.ndarray]]]) -> dict[int, list[bool]]:
         fab, name = self.fabric, self._name
         fab.fence()  # close the previous epoch before reserving against it
         C = np.zeros((self.p, self.p), np.int64)
@@ -421,6 +440,9 @@ class HostQueueGroup:
     def drain(self, rank: int, max_n: int | None = None) -> list[np.ndarray]:
         avail = int(self.ctrs[rank, TAIL] - self.ctrs[rank, HEAD])
         n = avail if max_n is None else min(avail, max_n)
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("queue.drain", rank=rank, queue=self._name, n=n)
         out = []
         for i in range(n):
             slot = int(self.ctrs[rank, HEAD] + np.uint64(i)) & (self.capacity - 1)

@@ -52,6 +52,7 @@ from repro import compat
 from repro.core import plan as plan_mod
 from repro.core import window as window_mod
 from repro.core.locks_sim import _AtomicWord
+from repro.obs import trace as obs_trace
 from repro.rmaq.queue import admission_plan
 
 Array = jax.Array
@@ -237,6 +238,9 @@ def alloc(
 ) -> tuple[PoolState, Array, Array]:
     """Standalone allocation epoch: one fused gather (collective; inside
     shard_map).  `want[t]` pages from target t; at most `kmax` per target."""
+    tr = obs_trace.TRACER
+    if tr.enabled:  # trace-time: static shape attrs only
+        tr.event("heap.alloc_epoch", axis=desc.axis, kmax=int(kmax))
     plan = plan_mod.RmaPlan(desc.axis)
     handles = alloc_record(plan, state, want)
     plan.flush(aggregate=True)
@@ -533,6 +537,7 @@ class HostPagePool:
         # atomicity, same amo_count), the sim fabric interposes chaos
         # (spurious CAS contention) between the protocol and the words.
         self.owner = owner
+        self.name = name
         self.fabric = default_fabric(fabric)
         self._bank_head = f"{name}.head"
         self._bank_ref = f"{name}.ref"
@@ -564,6 +569,10 @@ class HostPagePool:
                 self.gen[idx] += np.uint32(1)             # alloc bump
                 self.ref[idx].v = 1
                 self.allocs += 1
+                tr = obs_trace.TRACER
+                if tr.enabled:
+                    tr.event("heap.alloc", rank=origin, pool=self.name,
+                             page=idx, gen=int(self.gen[idx]))
                 return idx
 
     def free(self, idx: int, origin: int = 0) -> None:
@@ -584,6 +593,10 @@ class HostPagePool:
             new = head_pack(gen + 1, idx)
             if fab.cas(origin, self._bank_head, 0, old, new) == old:
                 self.frees += 1
+                tr = obs_trace.TRACER
+                if tr.enabled:
+                    tr.event("heap.free", rank=origin, pool=self.name,
+                             page=idx, gen=int(self.gen[idx]))
                 return
 
     # -------------------------------------------------------------- refcount

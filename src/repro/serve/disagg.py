@@ -57,6 +57,7 @@ the production-shaped part and are independent of the model plugged in.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +65,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
 from repro.rmaq import channel as rch
 from repro.rmaq import flow as rfl
 from repro.rmaq import queue as rq
@@ -213,6 +216,13 @@ class DisaggEngine:
         self.novel_pages_shipped = 0
         self.appends = 0           # channel appends (admitted requests)
         self.steps_run = 0
+        # request-lifecycle latency ledgers (§12): TTFT = submit -> result
+        # landing; TBT = engine-wide gap between consecutive result landings
+        # (disaggregated decode emits one token per request here, so the
+        # inter-result gap is the decode cadence, not a per-lane stream)
+        self.metrics = MetricsRegistry()
+        self._t_submit: dict[int, float] = {}
+        self._t_last_result: float | None = None
 
     # ----------------------------------------------------------- device step
     def _build_step(self):
@@ -422,6 +432,35 @@ class DisaggEngine:
         self._pending.append((req_id, toks))
         self._n_submitted += 1
         self._submitted_ids.add(int(req_id))
+        self._t_submit[int(req_id)] = time.perf_counter()
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("serve.request.submit", rid=int(req_id),
+                     plen=int(toks.shape[0]))
+
+    def _observe_result(self, rid: int) -> None:
+        """Land one decoded result in the latency ledgers: per-request TTFT
+        and the engine-wide inter-result gap (TBT)."""
+        now = time.perf_counter()
+        t0 = self._t_submit.pop(rid, None)
+        if t0 is not None:
+            ttft_us = (now - t0) * 1e6
+            self.metrics.histogram("serve.ttft_us").observe(ttft_us)
+            tr = obs_trace.TRACER
+            if tr.enabled:
+                tr.event("serve.request.first_token", rid=rid,
+                         ttft_us=int(ttft_us))
+        if self._t_last_result is not None:
+            self.metrics.histogram("serve.tbt_us").observe(
+                (now - self._t_last_result) * 1e6)
+        self._t_last_result = now
+
+    def serve_metrics(self) -> dict:
+        """Request-latency summaries (§12): TTFT and TBT in microseconds."""
+        return {
+            "ttft_us": self.metrics.histogram("serve.ttft_us").summary(),
+            "tbt_us": self.metrics.histogram("serve.tbt_us").summary(),
+        }
 
     def _host_credits(self) -> np.ndarray:
         """[p(producer), p(target), L] credits the device-side caches hold —
@@ -523,6 +562,13 @@ class DisaggEngine:
                 self._page_ready.add((job["dest"], pid))
             job["next"] += n_stage
             self.novel_pages_shipped += n_stage
+            if n_stage:
+                tr = obs_trace.TRACER
+                if tr.enabled:
+                    tr.event("serve.request.kv_transfer", rank=r,
+                             rid=int(job["rid"]), dst=int(job["dest"]),
+                             pages=int(n_stage),
+                             nbytes=int(n_stage) * cfg.page_nbytes)
             # append once every page (own novels AND shared pages shipped
             # by other jobs) is resident, and a lane credit is available
             resident = all((ref.owner, ref.page_id) in self._page_ready
@@ -567,6 +613,7 @@ class DisaggEngine:
             for rid, tok in zip(out_req[rr], out_tok[rr]):
                 if rid >= 0:
                     self.results[int(rid)] = int(tok)
+                    self._observe_result(int(rid))
                     for ref in self.kv.table_release(int(rid)):
                         self._page_ready.discard((ref.owner, ref.page_id))
                     emitted += 1
@@ -600,6 +647,11 @@ class DisaggEngine:
                 staged[r] = (rid, toks)
                 budget[r, t, ln] -= 1
                 self.lane_sends[t, ln] += 1
+                tr = obs_trace.TRACER
+                if tr.enabled:
+                    tr.event("serve.request.kv_transfer", rank=r, rid=int(rid),
+                             dst=int(t), lane=int(ln),
+                             nbytes=cfg.block_nbytes)
         else:
             # legacy: round-robin by request id, single implicit lane
             for r in range(cfg.n_prefill):
@@ -645,6 +697,7 @@ class DisaggEngine:
             for rid, tok in zip(out_req[r], out_tok[r]):
                 if rid >= 0:
                     self.results[int(rid)] = int(tok)
+                    self._observe_result(int(rid))
                     emitted += 1
         return emitted
 

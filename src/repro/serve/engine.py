@@ -38,6 +38,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import NamedTuple, Optional
 
 import jax
@@ -46,6 +47,8 @@ import numpy as np
 
 from repro.core.locks_sim import WRITER_BIT, LockOrigin, LockWindow
 from repro.models.registry import Model
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
 
 
 class LockDisciplineError(RuntimeError):
@@ -73,6 +76,7 @@ class Request:
     max_new: int = 16
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     output: list[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0      # wall time of submit() (TTFT reference point)
 
 
 class ServeEngine:
@@ -97,6 +101,10 @@ class ServeEngine:
         # host stand-in for window-region disjointness (see module docstring)
         self._cache_mu = threading.Lock()
         self.recycled_total = 0
+        # request-lifecycle latency ledgers (§12): TTFT = submit -> first
+        # token; TBT = gap between a lane's consecutive token emissions
+        self.metrics = MetricsRegistry()
+        self._slot_t_last = [0.0] * n_slots
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(self._prefill_impl, static_argnames=("plen",))
 
@@ -120,6 +128,11 @@ class ServeEngine:
         return logits[0], new_cache
 
     def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("serve.request.submit", rid=req.rid,
+                     plen=len(req.prompt), max_new=req.max_new)
         self.queue.put(req)
 
     # ------------------------------------------------- locked state sections
@@ -156,6 +169,10 @@ class ServeEngine:
         self.slot_req[slot] = None
         if req is not None:
             self.recycled_total += 1
+            tr = obs_trace.TRACER
+            if tr.enabled:
+                tr.event("serve.request.drain", rid=req.rid, slot=slot,
+                         tokens=len(req.output))
             req.done.set()
 
     # ------------------------------------------------------------ steps
@@ -189,6 +206,18 @@ class ServeEngine:
                 first = int(jnp.argmax(logits))
                 self.slot_last[slot] = first
                 req.output.append(first)   # the prefill already produced token 1
+                now = time.perf_counter()
+                self.metrics.histogram("serve.ttft_us").observe(
+                    (now - req.t_submit) * 1e6
+                )
+                self._slot_t_last[slot] = now
+                tr = obs_trace.TRACER
+                if tr.enabled:
+                    tr.event("serve.request.prefill", rid=req.rid, slot=slot,
+                             plen=plen)
+                    tr.event("serve.request.first_token", rid=req.rid,
+                             slot=slot,
+                             ttft_us=int((now - req.t_submit) * 1e6))
                 if len(req.output) < req.max_new:
                     # decode may pick the lane up now; an instantly-finished
                     # request must never become visible to the decoder (the
@@ -224,6 +253,7 @@ class ServeEngine:
             emitted = 0
             finished = []
             nxt = np.asarray(jnp.argmax(logits, -1))
+            tbt_hist = self.metrics.histogram("serve.tbt_us")
             for i in active:
                 req = self.slot_req[i]
                 if req is None:            # recycled concurrently mid-step
@@ -231,6 +261,9 @@ class ServeEngine:
                 req.output.append(int(nxt[i]))
                 self.slot_last[i] = int(nxt[i])
                 self.slot_pos[i] += 1
+                now = time.perf_counter()
+                tbt_hist.observe((now - self._slot_t_last[i]) * 1e6)
+                self._slot_t_last[i] = now
                 emitted += 1
                 if len(req.output) >= req.max_new or self.slot_pos[i] >= self.max_seq - 1:
                     finished.append(i)
@@ -245,6 +278,13 @@ class ServeEngine:
             finally:
                 self.lock.unlock_exclusive(0)
         return emitted
+
+    def serve_metrics(self) -> dict:
+        """Request-latency summaries (§12): TTFT and TBT in microseconds."""
+        return {
+            "ttft_us": self.metrics.histogram("serve.ttft_us").summary(),
+            "tbt_us": self.metrics.histogram("serve.tbt_us").summary(),
+        }
 
     def schedule(self) -> ScheduleTick:
         """One unified scheduler tick: admit, decode, recycle."""

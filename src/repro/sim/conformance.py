@@ -50,6 +50,8 @@ import numpy as np
 
 from repro.core.locks_sim import (GLOBAL_EXCL_UNIT, GLOBAL_SHRD_MASK,
                                   WRITER_BIT, _AtomicWord)
+from repro.obs import trace as obs_trace
+from repro.obs.export import dump_chrome_trace
 from repro.ft.elastic import kv_membership_change
 from repro.rmaq import queue as rq
 from repro.rmaq.channel import Lane
@@ -641,16 +643,29 @@ PROTOCOLS = {
 
 
 def run_one(protocol: str, n_ranks: int, schedule: str, seed: int,
-            **overrides) -> dict:
+            tracer=None, **overrides) -> dict:
+    """Run one conformance spec, optionally under an `obs` tracer.
+
+    The tracer is installed as the global tracer for the run's duration;
+    the harness's `Scheduler` attaches its virtual clock, so the collected
+    trace is timestamped in deterministic virtual ticks — a pure function
+    of ``(seed, schedule)``, byte-identical across replays (§12)."""
     if protocol not in PROTOCOLS:
         raise ValueError(f"unknown protocol {protocol!r} (have {sorted(PROTOCOLS)})")
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r} (have {sorted(SCHEDULES)})")
     spec = RunSpec(protocol, n_ranks, schedule, seed)
-    return PROTOCOLS[protocol](spec, **overrides)
+    if tracer is None:
+        return PROTOCOLS[protocol](spec, **overrides)
+    prev = obs_trace.set_tracer(tracer)
+    try:
+        return PROTOCOLS[protocol](spec, **overrides)
+    finally:
+        obs_trace.set_tracer(prev)
 
 
-def run_suite(protocols, n_ranks: int, schedules, seeds) -> list[dict]:
+def run_suite(protocols, n_ranks: int, schedules, seeds,
+              trace_dir: str | None = None) -> list[dict]:
     from repro.core.fabric import FabricError
     from repro.sim.sched import SchedulerError
 
@@ -660,6 +675,11 @@ def run_suite(protocols, n_ranks: int, schedules, seeds) -> list[dict]:
             for seed in seeds:
                 spec = RunSpec(protocol, n_ranks, schedule, seed)
                 entry = {"spec": spec, "ok": True, "error": None}
+                # with a trace dir, every run records under a fresh tracer
+                # so a failing run's trace can be exported post-mortem
+                tracer = obs_trace.Tracer() if trace_dir else None
+                prev = (obs_trace.set_tracer(tracer)
+                        if tracer is not None else None)
                 try:
                     entry["report"] = PROTOCOLS[protocol](spec)
                 except ConformanceError as e:
@@ -669,6 +689,16 @@ def run_suite(protocols, n_ranks: int, schedules, seeds) -> list[dict]:
                     # the sweep: report them with the same repro line
                     entry.update(ok=False, error=ConformanceError(
                         spec, -1, f"{type(e).__name__}: {e}"))
+                finally:
+                    if tracer is not None:
+                        obs_trace.set_tracer(prev)
+                if tracer is not None and not entry["ok"]:
+                    os.makedirs(trace_dir, exist_ok=True)
+                    path = os.path.join(
+                        trace_dir,
+                        f"{protocol}-{schedule}-seed{seed}.trace.json")
+                    dump_chrome_trace(tracer, path)
+                    entry["trace"] = path
                 results.append(entry)
     return results
 
@@ -690,6 +720,9 @@ def main(argv=None) -> int:
                          "(fault-injection schedules like 'tear')")
     ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"),
                     help="append a markdown summary to this file")
+    ap.add_argument("--trace-dir", default=None,
+                    help="export Perfetto traces of FAILING runs here "
+                         "(virtual-time, replay-exact)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -705,7 +738,8 @@ def main(argv=None) -> int:
         else:
             seeds = [int(s) for s in args.seeds.split(",") if s]
 
-    results = run_suite(protocols, ranks, schedules, seeds)
+    results = run_suite(protocols, ranks, schedules, seeds,
+                        trace_dir=args.trace_dir)
     lines = []
     n_fail = 0
     for r in results:
@@ -718,6 +752,8 @@ def main(argv=None) -> int:
         else:
             n_fail += 1
             lines.append(f"FAIL {tag}\n  {r['error']}")
+            if r.get("trace"):
+                lines.append(f"  trace: {r['trace']}")
     print("\n".join(lines))
     print(f"\n{len(results) - n_fail}/{len(results)} runs passed "
           f"({len(protocols)} protocols x {len(schedules)} schedules x "

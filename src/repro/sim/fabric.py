@@ -56,6 +56,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.fabric import Fabric, FabricError, apply_add
+from repro.obs import trace as obs_trace
 from repro.sim.sched import VirtualClock
 
 
@@ -129,7 +130,7 @@ class SimFabric(Fabric):
             apply_add(store, idx, value)
 
     def put(self, src: int, dst: int, region: str, idx, value) -> None:
-        self._count("puts")
+        self._count("puts", src=src, dst=dst, region=region)
         op = (dst, region, idx, np.copy(value) if isinstance(value, np.ndarray) else value, "put")
         if src == dst:
             self._apply_op(op)          # local memory: no wire
@@ -137,7 +138,7 @@ class SimFabric(Fabric):
         self._pending.setdefault(src, []).append(op)
 
     def add(self, src: int, dst: int, region: str, idx, delta) -> None:
-        self._count("accs")
+        self._count("accs", src=src, dst=dst, region=region)
         op = (dst, region, idx, delta, "add")
         if src == dst:
             self._apply_op(op)
@@ -146,12 +147,12 @@ class SimFabric(Fabric):
 
     def get(self, src: int, dst: int, region: str, idx=()):
         """Round-trip read of the *target-visible* (delivered) state."""
-        self._count("gets")
+        self._count("gets", src=src, dst=dst, region=region)
         out = self._store(region)[dst][idx] if idx != () else self._store(region)[dst]
         return np.copy(out)
 
     def gather(self, src: int, region: str):
-        self._count("gets")
+        self._count("gets", src=src, region=region)
         return np.copy(self._store(region))
 
     # ------------------------------------------------------------ transfers
@@ -182,6 +183,10 @@ class SimFabric(Fabric):
                 self.duplicates += 1
                 self._push(due + self.rng.randint(1, 3), seq, entry)
         self._last_due[(src, dst)] = due
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("sim.xfer.stage", rank=src, dst=dst, seq=seq, due=due,
+                     n_ops=len(ops))
 
     def _push(self, due: int, seq: int, entry: dict) -> None:
         self._tie += 1
@@ -194,10 +199,17 @@ class SimFabric(Fabric):
 
     def _apply_batch(self, seq: int, entry: dict) -> bool:
         """Apply one transfer exactly once; returns False for a dup copy."""
+        tr = obs_trace.TRACER
         if seq in self._applied:
             self.dup_discarded += 1
+            if tr.enabled:
+                tr.event("sim.xfer.dup_discard", rank=entry["dst"],
+                         src=entry["src"], seq=seq)
             return False
         self._applied.add(seq)
+        if tr.enabled:
+            tr.event("sim.xfer.deliver", rank=entry["dst"], src=entry["src"],
+                     seq=seq, n_ops=len(entry["ops"]))
         for op in entry["ops"]:
             self._apply_op(op)
         key = (entry["dst"], entry["epoch"])
@@ -268,7 +280,7 @@ class SimFabric(Fabric):
         return any(op[0] == dst for ops in self._pending.values() for op in ops)
 
     def fence_add(self, dst: int, region: str, idx, delta) -> None:
-        self._count("accs")
+        self._count("accs", src=dst, dst=dst, region=region)
         if self.chaos.tear or not self._dst_has_epoch_traffic(dst):
             # tear fault: publish the notification WITHOUT waiting for the
             # payloads it advertises — the §6.1 guarantee, violated
@@ -279,15 +291,21 @@ class SimFabric(Fabric):
 
     # -------------------------------------------------------------- AMOs
     def read_word(self, src: int, bank: str, i: int) -> int:
+        self._count_amo("read", src, bank, i)
         return self._word(bank, i).read()
 
     def fetch_add(self, src: int, bank: str, i: int, delta: int) -> int:
+        self._count_amo("fetch_add", src, bank, i)
         return self._word(bank, i).fetch_add(delta)
 
     def cas(self, src: int, bank: str, i: int, expected: int, new: int) -> int:
+        self._count_amo("cas", src, bank, i)
         if self.chaos.cas_fail_p and self.rng.random() < self.chaos.cas_fail_p:
             # spurious contention: fail without applying, reporting a value
             # that cannot equal `expected` — the caller's loop re-reads
+            tr = obs_trace.TRACER
+            if tr.enabled:
+                tr.event("sim.cas_spurious_fail", rank=src, bank=bank, i=i)
             return (expected + 1) & ((1 << 64) - 1)
         return self._word(bank, i).cas(expected, new)
 
@@ -298,6 +316,9 @@ class SimFabric(Fabric):
         fused-transfer unit chaos operates on."""
         from repro.core.epoch import SyncStats
 
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("fabric.flush", rank=src)
         SyncStats.record("flush_msgs", also=self.sync)
         pending = self._pending.pop(src, [])
         if not pending:

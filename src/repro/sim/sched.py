@@ -28,6 +28,8 @@ import bisect
 import random
 from typing import Callable, Optional
 
+from repro.obs import trace as obs_trace
+
 
 class VirtualClock:
     """Monotonic virtual time; nothing in the sim reads the wall clock."""
@@ -53,6 +55,9 @@ class Scheduler:
         self.seed = seed
         self.rng = random.Random(seed ^ 0x9E3779B9)
         self.clock = clock if clock is not None else VirtualClock()
+        # clock seam (§12): an installed tracer timestamps with THIS run's
+        # virtual clock from here on, so traced chaos runs replay exactly
+        obs_trace.TRACER.attach_clock(self.clock)
         self.on_event = on_event
         self.tasks: dict[str, object] = {}     # name -> generator (runnable)
         self._order: list[str] = []            # runnable names, kept sorted
@@ -75,6 +80,9 @@ class Scheduler:
     def _fire(self, kind: str, who: str) -> None:
         self.events += 1
         self.trace.append((self.clock.now, kind, who))
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event(f"sched.{kind}", rank=-1, who=who, index=self.events)
         if self.on_event is not None:
             self.on_event(kind, who, self)
 

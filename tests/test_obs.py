@@ -1,0 +1,449 @@
+"""Observability layer (DESIGN.md §12): tracer, clock seam, metrics
+registry, Chrome-trace export determinism, and the drift harness.
+
+The two satellite contracts pinned here:
+
+  * **Trace determinism** — the same ``(seed, schedule)`` conformance run
+    exports byte-identical traces across two runs (virtual clock domain),
+    including at the acceptance criterion's 256 ranks.
+  * **No-op invariance** — running instrumented code with no tracer (the
+    default `NullTracer`) produces exactly the same protocol results as a
+    traced run: instrumentation observes, never perturbs.
+"""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.obs import trace as obs_trace
+from repro.obs.export import chrome_trace, dumps_chrome_trace
+from repro.obs.metrics import Histogram, MetricsRegistry, snapshot_delta
+from repro.obs.trace import NULL_SPAN, NULL_TRACER, Tracer, set_tracer
+
+
+@pytest.fixture(autouse=True)
+def _restore_tracer():
+    """Every test leaves the process-wide tracer as it found it."""
+    prev = obs_trace.TRACER
+    yield
+    set_tracer(prev)
+
+
+# ================================================================== tracer
+class TestTracer:
+    def test_default_is_noop(self):
+        assert obs_trace.TRACER is NULL_TRACER
+        assert not obs_trace.TRACER.enabled
+        # the null span is a shared singleton: no allocation on hot paths
+        assert obs_trace.TRACER.span("x") is NULL_SPAN
+        with obs_trace.TRACER.span("x") as sp:
+            sp.set(a=1)                          # absorbed silently
+
+    def test_event_and_span_recording(self):
+        tr = Tracer()
+        tr.event("e.one", rank=3, n=7)
+        with tr.span("s.outer", rank=1, k=2) as sp:
+            tr.event("e.inner", rank=1)
+            sp.set(raw=5, coalesced=1)
+        assert [e["name"] for e in tr.events] == ["e.one", "e.inner", "s.outer"]
+        outer = tr.named("s.outer")[0]
+        assert outer["ph"] == "X"
+        assert outer["args"] == {"k": 2, "raw": 5, "coalesced": 1}
+        assert outer["dur"] >= 0
+        assert tr.ranks() == [1, 3]
+        assert len(tr.by_rank(1)) == 2
+
+    def test_span_nesting_intervals_contain_children(self):
+        tr = Tracer(clock=_TickClock())
+        with tr.span("outer", rank=0):
+            with tr.span("inner", rank=0):
+                pass
+        inner, outer = tr.named("inner")[0], tr.named("outer")[0]
+        assert outer["ts"] <= inner["ts"]
+        assert outer["ts"] + outer["dur"] >= inner["ts"] + inner["dur"]
+
+    def test_context_manager_installs_and_restores(self):
+        assert obs_trace.TRACER is NULL_TRACER
+        with Tracer() as tr:
+            assert obs_trace.TRACER is tr
+        assert obs_trace.TRACER is NULL_TRACER
+
+    def test_clock_seam_switches_domain(self):
+        tr = Tracer()
+        assert tr.clock_domain == "wall_us"
+        clk = _TickClock()
+        tr.attach_clock(clk)
+        assert tr.clock_domain == "virtual"
+        clk.now = 42
+        tr.event("a")
+        assert tr.events[-1]["ts"] == 42
+        tr.detach_clock()
+        assert tr.clock_domain == "wall_us"
+
+
+class _TickClock:
+    """Minimal stand-in for sim.sched.VirtualClock."""
+
+    def __init__(self):
+        self.now = 0
+
+
+# ============================================== snapshot schema unification
+class TestSnapshotUnification:
+    def test_snapshot_delta_nested_and_missing_keys(self):
+        cur = {"a": 5, "nested": {"x": 3, "y": 1}, "tag": "s", "new": 2}
+        prev = {"a": 2, "nested": {"x": 1}, "tag": "s"}
+        assert snapshot_delta(cur, prev) == {
+            "a": 3, "nested": {"x": 2, "y": 1}, "tag": "s", "new": 2}
+        assert snapshot_delta(cur, None) == cur
+
+    def test_opcounter_delta(self):
+        from repro.core.rma import OpCounter
+
+        with OpCounter() as c:
+            OpCounter.record("puts", 2, axis="x")
+            before = c.snapshot()
+            OpCounter.record("gets", 3, axis="x")
+        d = c.delta(before)
+        assert d["puts"] == 0 and d["gets"] == 3
+        assert d["by_axis"]["x"] == {"gets": 3, "puts": 0}
+        # accepts the live object too
+        assert c.delta(c)["raw_msgs"] == 0
+
+    def test_syncstats_delta(self):
+        from repro.core.epoch import SyncStats
+
+        with SyncStats() as s:
+            SyncStats.record("flush_msgs", 4)
+            before = s.snapshot()
+            SyncStats.record("flush_msgs", 1)
+            SyncStats.record("barrier_stages", 3)
+        d = s.delta(before)
+        assert d["flush_msgs"] == 1 and d["barrier_stages"] == 3
+
+    def test_planstats_snapshot_shares_schema(self):
+        from repro.core.plan import PlanStats
+
+        st = PlanStats()
+        st.raw, st.coalesced, st.bytes_wire = 8, 2, 64
+        snap = st.snapshot()
+        # same message-count key naming as OpCounter/SyncStats (§12.3)
+        assert snap["raw_msgs"] == 8 and snap["coalesced_msgs"] == 2
+        st.raw += 4
+        assert st.delta(snap)["raw_msgs"] == 4
+
+    def test_fabric_delta(self):
+        import numpy as np
+
+        from repro.core.fabric import LocalFabric
+
+        fab = LocalFabric(2)
+        cells = np.zeros((2, 1), np.int64)
+        fab.register("cell", cells)
+        before = fab.snapshot()
+        fab.put(0, 1, "cell", (0,), 7)
+        fab.flush(0)
+        fab.fence()
+        d = fab.delta(before)
+        assert d["puts"] == 1 and d["epoch"] == 1
+        assert d["sync_flush_msgs"] == 1
+
+    def test_registry_ingests_all_four_schemas(self):
+        import numpy as np
+
+        from repro.core.epoch import SyncStats
+        from repro.core.fabric import LocalFabric
+        from repro.core.plan import PlanStats
+        from repro.core.rma import OpCounter
+
+        reg = MetricsRegistry()
+        with OpCounter() as c:
+            OpCounter.record("puts", 2, axis="w")
+        reg.ingest("rma", c.snapshot())
+        reg.ingest("sync", SyncStats().snapshot())
+        reg.ingest("plan", PlanStats().snapshot())
+        fab = LocalFabric(2)
+        fab.register("cell", np.zeros((2, 1), np.int64))
+        fab.fence()
+        reg.ingest("fabric", fab.snapshot())
+        flat = reg.flat()
+        assert flat["rma.puts"] == 2
+        assert flat["rma.by_axis.w.puts"] == 2       # nested dicts recurse
+        assert "sync.flush_msgs" in flat
+        assert "plan.raw_msgs" in flat
+        assert flat["fabric.epoch"] == 1
+        assert "fabric.sync_barrier_stages" in flat
+
+
+# ======================================================== metrics registry
+class TestMetricsRegistry:
+    def test_get_or_create_keyed_by_labels(self):
+        reg = MetricsRegistry()
+        a = reg.counter("ops", axis="x")
+        b = reg.counter("ops", axis="x")
+        c = reg.counter("ops", axis="y")
+        assert a is b and a is not c
+        a.inc(3)
+        assert reg.flat() == {"ops{axis=x}": 3, "ops{axis=y}": 0}
+
+    def test_histogram_percentiles(self):
+        h = Histogram()
+        for v in range(1, 101):
+            h.observe(float(v))
+        s = h.summary()
+        assert s["count"] == 100 and s["min"] == 1.0 and s["max"] == 100.0
+        assert s["p50"] == 51.0 and s["p99"] == 99.0
+        assert Histogram().summary()["count"] == 0
+
+    def test_flat_is_deterministic(self):
+        reg = MetricsRegistry()
+        reg.gauge("b").set(2)
+        reg.gauge("a").set(1)
+        reg.histogram("h").observe(5.0)
+        assert list(reg.flat()) == ["a", "b", "h"]
+        assert reg.flat()["h"]["count"] == 1
+
+
+# ============================================= trace determinism (satellite)
+class TestTraceDeterminism:
+    def _traced(self, protocol, ranks, schedule, seed):
+        from repro.sim.conformance import run_one
+
+        tr = Tracer()
+        report = run_one(protocol, ranks, schedule, seed, tracer=tr)
+        return tr, report
+
+    def test_byte_identical_across_replays(self):
+        tr1, _ = self._traced("queue", 64, "reorder", 0)
+        tr2, _ = self._traced("queue", 64, "reorder", 0)
+        assert tr1.clock_domain == "virtual"       # the Scheduler attached
+        b1, b2 = dumps_chrome_trace(tr1), dumps_chrome_trace(tr2)
+        assert b1 == b2
+        assert len(tr1.events) > 0
+
+    def test_different_seed_different_trace(self):
+        tr1, _ = self._traced("epoch", 16, "delay", 0)
+        tr2, _ = self._traced("epoch", 16, "delay", 1)
+        assert dumps_chrome_trace(tr1) != dumps_chrome_trace(tr2)
+
+    def test_256_rank_trace_byte_identical_and_loadable(self):
+        """The acceptance criterion: 256 ranks, virtual time, Perfetto-shaped."""
+        tr1, _ = self._traced("epoch", 256, "reorder", 0)
+        tr2, _ = self._traced("epoch", 256, "reorder", 0)
+        b1 = dumps_chrome_trace(tr1)
+        assert b1 == dumps_chrome_trace(tr2)
+        doc = json.loads(b1)
+        assert doc["metadata"]["clock_domain"] == "virtual"
+        evs = doc["traceEvents"]
+        # per-rank thread tracks plus the control track
+        names = {e["args"]["name"] for e in evs if e["name"] == "thread_name"}
+        assert "control" in names
+        assert {f"rank {r}" for r in (0, 255)} <= names
+        # every non-metadata event is a well-formed complete/instant event
+        for e in evs:
+            if e["ph"] == "M":
+                continue
+            assert e["ph"] in ("X", "i") and "ts" in e and "tid" in e
+
+    def test_run_one_restores_previous_tracer(self):
+        from repro.sim.conformance import run_one
+
+        assert obs_trace.TRACER is NULL_TRACER
+        run_one("epoch", 8, "delay", 0, tracer=Tracer())
+        assert obs_trace.TRACER is NULL_TRACER
+
+    def test_suite_exports_failing_run_traces(self, tmp_path):
+        from repro.sim.conformance import run_suite
+
+        # tear is the fault-injection schedule: the queue protocol MUST
+        # fail under it, and the suite must export that run's trace
+        results = run_suite(["queue"], 32, ["tear"], [0],
+                            trace_dir=str(tmp_path))
+        assert any(not r["ok"] for r in results)
+        failing = [r for r in results if not r["ok"]]
+        for r in failing:
+            assert r["trace"].endswith("queue-tear-seed0.trace.json")
+            doc = json.loads(open(r["trace"]).read())
+            assert doc["metadata"]["clock_domain"] == "virtual"
+        assert obs_trace.TRACER is NULL_TRACER     # restored after the sweep
+
+
+# ================================================ no-op invariance (satellite)
+class TestNoopInvariance:
+    def test_untraced_equals_traced_report(self):
+        from repro.sim.conformance import run_one
+
+        plain = run_one("queue", 32, "duplicate", 3)
+        traced_tr = Tracer()
+        traced = run_one("queue", 32, "duplicate", 3, tracer=traced_tr)
+        assert plain == traced
+        assert len(traced_tr.events) > 0           # the tracer did observe
+
+    def test_flow_report_unchanged_under_tracing(self):
+        from repro.sim.conformance import run_one
+
+        plain = run_one("flow", 16, "reorder", 1)
+        traced = run_one("flow", 16, "reorder", 1, tracer=Tracer())
+        assert plain == traced
+
+
+# ==================================== lock timeout diagnostics (satellite)
+class TestLockTimeoutDiagnostics:
+    def test_wait_and_attempts_carried(self):
+        from repro.core.locks_sim import LockOrigin, LockTimeout, LockWindow
+
+        win = LockWindow(p=1)
+        holder = LockOrigin(win, rank=0)
+        holder.lock_exclusive(0)
+        blocked = LockOrigin(win, rank=1)
+        with pytest.raises(LockTimeout) as ei:
+            blocked.lock_shared(0, backoff=1e-6, max_retries=3)
+        e = ei.value
+        assert e.attempts == 3
+        assert e.wait_s > 0
+        assert "after 3 retries" in str(e)
+        assert "held_by=rank 0" in str(e)          # pre-existing holder info
+
+    def test_timeout_emits_trace_event(self):
+        from repro.core.locks_sim import LockOrigin, LockTimeout, LockWindow
+
+        win = LockWindow(p=1)
+        LockOrigin(win, rank=0).lock_exclusive(0)
+        with Tracer() as tr:
+            with pytest.raises(LockTimeout):
+                LockOrigin(win, rank=1).lock_shared(0, max_retries=2)
+        (ev,) = tr.named("lock.timeout")
+        assert ev["args"]["attempts"] == 2
+        assert ev["args"]["op"] == "lock_shared"
+        assert ev["args"]["wait_us"] >= 0
+
+
+# ============================================================ drift harness
+class TestDriftHarness:
+    def _write_benches(self, root, tamper=None):
+        from repro.core.perfmodel import DEFAULT_MODEL
+
+        k, msg_bytes = 32, 8
+        packed = DEFAULT_MODEL.select_aggregation(k, float(msg_bytes)) == "pack"
+        wire = 1 if packed else k
+        rma_plan = {
+            "k_msgs": k, "msg_bytes": msg_bytes,
+            "eager": {"raw_msgs": k, "wire_transfers": k},
+            "coalesced": {"raw_msgs": k, "wire_transfers": wire},
+        }
+        serve_flow = {
+            "queue_backpressure": {
+                "retry": {"wire_transfers_per_append": 2,
+                          "measured_msg_rate_per_s": 1e5},
+                "credit": {"wire_transfers_per_append": 2,
+                           "measured_msg_rate_per_s": 2e5},
+            },
+            "serve_engine": {
+                "retry": {"retries": 3, "msg_stats": {"wire_msgs_per_step": 2}},
+                "credit": {"retries": 0, "msg_stats": {"wire_msgs_per_step": 2}},
+            },
+            "model": {"modeled_msg_rate_per_s": 1e6},
+        }
+        rmem = {"inline": {"wire_transfers_per_append": 2},
+                "paged": {"wire_transfers_per_append": 2}}
+        if tamper:
+            tamper(rma_plan, serve_flow, rmem)
+        for name, doc in (("BENCH_rma_plan.json", rma_plan),
+                          ("BENCH_serve_flow.json", serve_flow),
+                          ("BENCH_rmem.json", rmem)):
+            (root / name).write_text(json.dumps(doc))
+
+    def test_matching_benches_pass_the_gate(self, tmp_path):
+        from repro.obs import drift
+
+        self._write_benches(tmp_path)
+        entries = drift.gate(str(tmp_path),
+                             json_path=str(tmp_path / "BENCH_drift.json"))
+        assert entries and not drift.violations(entries)
+        doc = json.loads((tmp_path / "BENCH_drift.json").read_text())
+        assert doc["violations"] == 0
+        assert doc["count_tol"] == drift.COUNT_TOL
+        # rate rows are informational: present but never gated
+        rates = [e for e in entries if not e["gate"]]
+        assert rates and all(e["tol"] == drift.RATE_TOL for e in rates)
+
+    def test_wire_count_drift_fails_the_gate(self, tmp_path):
+        from repro.obs import drift
+
+        def tamper(rma_plan, serve_flow, rmem):
+            serve_flow["serve_engine"]["credit"]["msg_stats"][
+                "wire_msgs_per_step"] = 3
+        self._write_benches(tmp_path, tamper)
+        with pytest.raises(SystemExit, match="drift beyond tolerance"):
+            drift.gate(str(tmp_path))
+        bad = drift.violations(drift.collect(str(tmp_path)))
+        assert [e["metric"] for e in bad] == ["engine.credit.wire_msgs_per_step"]
+
+    def test_credit_retries_are_gated_at_zero(self, tmp_path):
+        from repro.obs import drift
+
+        def tamper(rma_plan, serve_flow, rmem):
+            serve_flow["serve_engine"]["credit"]["retries"] = 1
+        self._write_benches(tmp_path, tamper)
+        with pytest.raises(SystemExit):
+            drift.gate(str(tmp_path))
+
+    def test_rate_drift_is_informational_only(self, tmp_path):
+        from repro.obs import drift
+
+        def tamper(rma_plan, serve_flow, rmem):
+            # 10x off the model: flagged in the table, never a gate failure
+            serve_flow["queue_backpressure"]["credit"][
+                "measured_msg_rate_per_s"] = 1e12
+        self._write_benches(tmp_path, tamper)
+        entries = drift.gate(str(tmp_path))
+        assert not drift.violations(entries)
+
+    def test_table_marks_drift_rows(self, tmp_path):
+        from repro.obs import drift
+
+        def tamper(rma_plan, serve_flow, rmem):
+            rmem["paged"]["wire_transfers_per_append"] = 4
+        self._write_benches(tmp_path, tamper)
+        table = drift.format_table(drift.collect(str(tmp_path)))
+        assert "DRIFT" in table and "| info |" in table
+
+
+# ========================================================== serve latency
+class TestServeLatencyMetrics:
+    def test_engine_ttft_tbt_histograms(self):
+        from repro.serve.engine import Request, ServeEngine
+
+        from .test_training import _StubServeModel
+
+        eng = ServeEngine(_StubServeModel(), {}, n_slots=2, max_seq=32)
+        with Tracer() as tr:
+            reqs = [Request(rid=i, prompt=[1, 2], max_new=4) for i in range(3)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_drained()
+        m = eng.serve_metrics()
+        assert m["ttft_us"]["count"] == 3          # one first-token per request
+        assert m["ttft_us"]["p50"] > 0
+        # 4 tokens per request, first from prefill: 3 decode gaps each
+        assert m["tbt_us"]["count"] == 9
+        assert len(tr.named("serve.request.submit")) == 3
+        assert len(tr.named("serve.request.first_token")) == 3
+        assert len(tr.named("serve.request.drain")) == 3
+
+    def test_chrome_export_carries_serve_events(self):
+        from repro.serve.engine import Request, ServeEngine
+
+        from .test_training import _StubServeModel
+
+        eng = ServeEngine(_StubServeModel(), {}, n_slots=1, max_seq=32)
+        with Tracer() as tr:
+            eng.submit(Request(rid=7, prompt=[3], max_new=2))
+            eng.run_until_drained()
+        doc = chrome_trace(tr)
+        names = {e["name"] for e in doc["traceEvents"]}
+        assert {"serve.request.submit", "serve.request.first_token",
+                "serve.request.drain"} <= names
+        assert doc["metadata"]["clock_domain"] == "wall_us"
