@@ -7,6 +7,11 @@ than inline-payload mode, at the SAME 2 fused wire transfers per channel
 append (the scatter of novel pages is a separate, prefix-shrinkable
 transfer).  Alloc throughput covers both the host CAS free-list (real
 threads) and the SPMD rank-ordered alloc epoch, next to the §10 model.
+
+The ``decode`` series is the §13 evidence: the same workload decoded by
+the fused paged-attention kernel (2-page staging window) vs the
+gather-then-attend baseline (full packed block), with the modeled
+fused-vs-gather crossover alongside.
 """
 import functools
 import json
@@ -98,7 +103,8 @@ def spmd_alloc_epoch_us(n: int, n_pages: int = 64, kmax: int = 4) -> float:
 
 # ----------------------------------------------------- prefix-hit savings
 def run_engine(n: int, paged: bool, n_req: int = 12,
-               shared_frac: float = 0.5, seed: int = 5) -> dict:
+               shared_frac: float = 0.5, seed: int = 5,
+               attend: str = "fused") -> dict:
     """One mode on the shared-prefix workload: every request's first
     `shared_frac` of the prompt is identical (>= 50% page-level reuse for
     all but the first request routed to each decoder)."""
@@ -107,6 +113,7 @@ def run_engine(n: int, paged: bool, n_req: int = 12,
         n_prefill=max(1, n // 2), block_tokens=16, d_model=32, vocab=61,
         queue_capacity=16, max_recv_per_step=4, n_lanes=2, flow=True,
         paged=paged, page_tokens=4, novel_slots=2, pool_pages=48,
+        attend=attend,
     )
     eng = DisaggEngine(mesh, "serve", cfg, seed=0)
     rng = np.random.RandomState(seed)
@@ -137,6 +144,11 @@ def run_engine(n: int, paged: bool, n_req: int = 12,
             "prefix_hit_rate": ps["prefix_hit_rate"],
             "effective_payload_bytes_per_req":
                 ps["effective_payload_bytes"] / n_req,
+            "attend_path": ps["attend_path"],
+            "pages_per_block": ps["pages_per_block"],
+            "staging_pages_resident": ps["staging_pages_resident"],
+            "staging_bytes_per_decode": ps["staging_bytes_per_decode"],
+            "attend_us": eng.serve_metrics()["attend_us"],
         }
     else:
         append_transfers = eng.msg_stats["wire_msgs_per_step"]
@@ -157,6 +169,53 @@ def run_engine(n: int, paged: bool, n_req: int = 12,
     }
 
 
+# ------------------------------------------------- fused-vs-gather decode
+def decode_series(n: int, paged_fused: dict) -> dict:
+    """The DESIGN.md §13 A/B: the same shared-prefix workload decoded by
+    the fused paged-attention kernel vs the gather-then-attend baseline.
+    The structural win is the staging bound — O(page·2) resident bytes vs
+    the gather's O(block) packed copy — at identical wire fingerprints and
+    identical emitted tokens (both runs assert correctness inside
+    `run_engine`)."""
+    m = DEFAULT_MODEL
+    gather = run_engine(n, paged=True, attend="gather")
+    ppb = paged_fused["pages_per_block"]
+    page_nbytes = int(paged_fused["staging_bytes_per_decode"]
+                      / paged_fused["staging_pages_resident"])
+    series = {
+        "pages_per_block": ppb,
+        "page_nbytes": page_nbytes,
+        "fused": {k: paged_fused[k] for k in (
+            "attend_path", "staging_pages_resident",
+            "staging_bytes_per_decode", "wire_transfers_per_append",
+            "attend_us")},
+        "gather": {k: gather[k] for k in (
+            "attend_path", "staging_pages_resident",
+            "staging_bytes_per_decode", "wire_transfers_per_append",
+            "attend_us")},
+        "staging_bytes_reduction":
+            gather["staging_bytes_per_decode"]
+            / paged_fused["staging_bytes_per_decode"],
+        "model": {
+            "p_paged_attention_us":
+                m.p_paged_attention(ppb, page_nbytes) * 1e6,
+            "p_paged_gather_attend_us":
+                m.p_paged_gather_attend(ppb, page_nbytes) * 1e6,
+            "select_paged_attend_toy":
+                m.select_paged_attend(ppb, page_nbytes),
+            "select_paged_attend_64KB_pages":
+                m.select_paged_attend(ppb, 64 * 1024),
+            "crossover_page_bytes": m.paged_attend_crossover_bytes(ppb),
+        },
+    }
+    # the staging-window bound, asserted where the evidence is produced
+    assert series["fused"]["staging_pages_resident"] == min(2, ppb)
+    assert series["gather"]["staging_pages_resident"] == ppb
+    assert series["fused"]["wire_transfers_per_append"] == \
+        series["gather"]["wire_transfers_per_append"]
+    return series
+
+
 def main() -> None:
     n = len(jax.devices())
     m = DEFAULT_MODEL
@@ -165,6 +224,7 @@ def main() -> None:
     spmd_us = spmd_alloc_epoch_us(n)
     inline = run_engine(n, paged=False)
     paged = run_engine(n, paged=True)
+    decode = decode_series(n, paged)
 
     cfg_block, cfg_ppb = 16 * 2 * 32 * 4.0, 4
     model = {
@@ -185,6 +245,7 @@ def main() -> None:
         "alloc": {**alloc, "spmd_epoch_us": spmd_us},
         "inline": inline,
         "paged": paged,
+        "decode": decode,
         "savings": {
             "effective_payload_per_req":
                 1.0 - paged["effective_payload_bytes_per_req"]
@@ -206,12 +267,21 @@ def main() -> None:
              f"bytes_wire_per_req={r['bytes_wire_per_req']:.0f};"
              f"payload_per_req={r['effective_payload_bytes_per_req']:.0f};"
              f"wire_per_append={r['wire_transfers_per_append']}")
+    for path in ("fused", "gather"):
+        d = decode[path]
+        emit(f"rmem_decode_{path}", d["attend_us"]["p50"],
+             f"staging_pages={d['staging_pages_resident']};"
+             f"staging_bytes={d['staging_bytes_per_decode']}")
     print(f"# wrote BENCH_rmem.json: bytes_wire/req "
           f"{inline['bytes_wire_per_req']:.0f} (inline) -> "
           f"{paged['bytes_wire_per_req']:.0f} (paged, "
           f"hit_rate={paged['prefix_hit_rate']:.2f}) at "
           f"{paged['wire_transfers_per_append']} wire transfers per append",
           flush=True)
+    print(f"# decode staging: gather {decode['gather']['staging_bytes_per_decode']}B"
+          f" -> fused {decode['fused']['staging_bytes_per_decode']}B"
+          f" ({decode['staging_bytes_reduction']:.1f}x; modeled crossover at "
+          f"{decode['model']['crossover_page_bytes']:.0f}B pages)", flush=True)
 
     # the acceptance criteria, asserted where the evidence is produced
     assert paged["wire_transfers_per_append"] == \

@@ -337,6 +337,53 @@ class PerfModel:
                 + novel * (self.p_put(page_bytes, hops)
                            + self.p_page_alloc(fused=True)))
 
+    def p_paged_attention(self, n_pages: int, page_bytes: float,
+                          hops: int = 1) -> float:
+        """Fused paged decode attention (`kernels.paged_attention`): one
+        id-list message, then each page streamed as its OWN transfer and
+        folded into the online-softmax accumulator on arrival.  The 2-page
+        staging window pipelines the stream, so the cost is the id put +
+        one issue latency + n per-page injections (message-rate bound for
+        small pages, link-bandwidth bound for large) — and NO pack copies:
+        the packed reply block of `p_paged_gather` never exists."""
+        return (self.p_put(8.0 * n_pages, hops)
+                + hops * self.hw.ici_latency_per_hop
+                + n_pages * self.p_message_rate(page_bytes))
+
+    def p_paged_gather_attend(self, n_pages: int, page_bytes: float,
+                              hops: int = 1) -> float:
+        """The materialize-then-attend baseline: the fused gather (ids +
+        one packed reply + pack copies) plus re-reading the packed block
+        out of HBM when attention finally consumes it."""
+        total = n_pages * page_bytes
+        return self.p_paged_gather(n_pages, page_bytes, hops) \
+            + total / self.hw.hbm_bandwidth
+
+    def select_paged_attend(self, n_pages: int,
+                            page_bytes: float) -> Literal["fused", "gather"]:
+        """§6-style dispatch rule for decode attention over scattered KV
+        pages: stream-and-accumulate vs gather-then-attend.  Many tiny
+        pages are injection-rate-limited, so the gather's single packed
+        reply amortizes the per-message overhead and wins; once a page
+        crosses the message-rate boundary (~20 KiB on v5e) every page
+        saturates the link by itself and the fused stream wins by skipping
+        the pack + re-read HBM round trips — the same Fig. 5b regime split
+        as `select_aggregation`, applied to the attention hot loop."""
+        fused = self.p_paged_attention(n_pages, page_bytes)
+        gather = self.p_paged_gather_attend(n_pages, page_bytes)
+        return "fused" if fused <= gather else "gather"
+
+    def paged_attend_crossover_bytes(self, n_pages: int = 4) -> float:
+        """Smallest page size (geometric scan) where the fused stream
+        starts beating gather-then-attend — the modeled crossover
+        `bench_rmem`'s decode series documents."""
+        s = 8.0
+        while s < 64 * 2**20:
+            if self.select_paged_attend(n_pages, s) == "fused":
+                return s
+            s *= 2.0
+        return s
+
     def select_kv_transport(
         self, block_bytes: float, pages_per_block: int,
         reuse_fraction: float,

@@ -1,4 +1,5 @@
-"""Shared Pallas kernel helpers (one copy of the cross-device handshake)."""
+"""Shared Pallas kernel helpers (one copy of the cross-device handshake
+and of the interpret-vs-compiled dispatch probe)."""
 
 from __future__ import annotations
 
@@ -6,6 +7,25 @@ import jax
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+
+_INTERPRET: bool | None = None
+
+
+def interpret_mode(override: bool | None = None) -> bool:
+    """Should kernels run under the Pallas interpreter?
+
+    One cached env probe for every kernel package (previously each ops.py
+    carried its own `_interpret()` copy).  The probe — "is the default
+    backend a TPU?" — is stable for the life of the process, so it is
+    evaluated once.  `override` short-circuits the probe entirely: tests
+    pass `True`/`False` to pin the dispatch mode regardless of backend.
+    """
+    if override is not None:
+        return override
+    global _INTERPRET
+    if _INTERPRET is None:
+        _INTERPRET = jax.default_backend() != "tpu"
+    return _INTERPRET
 
 
 def neighbor_barrier(axis: str, n: int, interpret: bool = False) -> None:

@@ -11,25 +11,37 @@ import functools
 
 import jax
 
+from repro.kernels.common import interpret_mode
+
 from .kernel import flash_attention_pallas
 from .ref import attention_ref
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def effective_blocks(seq_q: int, seq_k: int, block_q: int = 512,
+                     block_k: int = 512) -> tuple[int, int]:
+    """Clamp the requested block sizes to the actual sequence lengths.
+
+    The 512-default blocks are sized for long-context prefill; decode
+    shapes (seq of 1–64) would otherwise pad every block up to 512 — a
+    ~10–500x wasted-compute factor per step AND a fresh jit trace for
+    every (block_q, block_k) that reaches the kernel.  Clamping here, at
+    the dispatch layer, both kills the padding and canonicalizes the
+    static block arguments so small-seq calls share traces.
+    """
+    return min(block_q, seq_q), min(block_k, seq_k)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _flash(q, k, v, causal, block_q, block_k):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, block_q, block_k, interpret):
     return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
-                                  block_k=block_k, interpret=_interpret())
+                                  block_k=block_k, interpret=interpret)
 
 
-def _flash_fwd(q, k, v, causal, block_q, block_k):
-    return _flash(q, k, v, causal, block_q, block_k), (q, k, v)
+def _flash_fwd(q, k, v, causal, block_q, block_k, interpret):
+    return _flash(q, k, v, causal, block_q, block_k, interpret), (q, k, v)
 
 
-def _flash_bwd(causal, block_q, block_k, res, g):
+def _flash_bwd(causal, block_q, block_k, interpret, res, g):
     q, k, v = res
     _, vjp = jax.vjp(lambda q, k, v: attention_ref(q, k, v, causal=causal), q, k, v)
     return vjp(g)
@@ -38,7 +50,11 @@ def _flash_bwd(causal, block_q, block_k, res, g):
 _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
-def flash_attention(q, k, v, causal: bool = True, block_q: int = 512, block_k: int = 512):
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool | None = None):
     """[B,Hq,S,hd] x [B,Hkv,S,hd] -> [B,Hq,S,hd]."""
-    return _flash(q, k, v, causal, block_q, block_k)
+    block_q, block_k = effective_blocks(q.shape[2], k.shape[2],
+                                        block_q, block_k)
+    return _flash(q, k, v, causal, block_q, block_k, interpret_mode(interpret))

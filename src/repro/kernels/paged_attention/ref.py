@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for fused paged attention (exact-math semantics).
+
+The contract both Pallas variants must match: queries attend over the
+tokens of the pages named by an int32 page-id list, with
+
+  * id ``-1`` (or any negative) = a **masked page** — its tokens are
+    excluded from the softmax entirely (score ``NEG_INF``), unlike
+    `paged_gather`'s clamp-to-row-0 packing which leaves the caller to
+    zero rows after the fact;
+  * a fully-masked query row normalises against an empty key set and
+    yields zeros (the ``l == 0`` guard);
+  * causal masking uses the decode-friendly offset convention of
+    `flash_attention.ref.attention_ref`: key position ``t`` is visible to
+    query position ``s`` iff ``t <= s + (Sk - Sq)`` — the last query sees
+    every key, matching a suffix of queries attending over a full KV
+    history.
+
+Pages carry K and V interleaved, ``[n_pages, page_tokens, 2, hd]`` —
+exactly the layout of `serve.disagg`'s decoder pools, so the serving path
+hands its pool to the kernel without re-packing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_gather.ref import paged_gather_ref
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jax.Array, kv_pages: jax.Array, ids: jax.Array,
+                        scale: float | None = None,
+                        causal: bool = False) -> jax.Array:
+    """q [m, Sq, hd], kv_pages [n_pages, pt, 2, hd], ids [m, k] int32
+    → [m, Sq, hd]: row i attends over the pt·k tokens of pages ids[i]."""
+    m, Sq, hd = q.shape
+    n_pages, pt = kv_pages.shape[0], kv_pages.shape[1]
+    k = ids.shape[1]
+    Sk = k * pt
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+
+    rows = kv_pages[jnp.clip(ids, 0, n_pages - 1)]     # [m, k, pt, 2, hd]
+    k_in = rows[:, :, :, 0].reshape(m, Sk, hd).astype(jnp.float32)
+    v_in = rows[:, :, :, 1].reshape(m, Sk, hd).astype(jnp.float32)
+
+    s = jnp.einsum("msd,mtd->mst", q.astype(jnp.float32) * scale, k_in)
+    valid = jnp.repeat(ids >= 0, pt, axis=1)           # [m, Sk] token mask
+    mask = valid[:, None, :]
+    if causal:
+        mask = mask & jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)[None]
+    s = jnp.where(mask, s, NEG_INF)
+    s_max = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - s_max), 0.0)
+    l = p.sum(axis=-1, keepdims=True)                  # noqa: E741
+    out = jnp.einsum("mst,mtd->msd", p, v_in) / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)
+
+
+def paged_attention_shift_ref(q: jax.Array, kv_pages: jax.Array,
+                              ids: jax.Array, shift: int, axis: str,
+                              scale: float | None = None,
+                              causal: bool = False) -> jax.Array:
+    """Cross-rank oracle: each rank attends over pages ``ids`` of rank
+    (me+shift)'s pool.  q [Sq, hd], kv_pages [n_pages, pt, 2, hd],
+    ids [k] → [Sq, hd].  The page fetch is the two-`put_shift` gather of
+    `paged_gather_ref`; the attention math is `paged_attention_ref`."""
+    rows = paged_gather_ref(kv_pages, ids, shift, axis)   # [k, pt, 2, hd]
+    # masking stays a REQUESTER-side decision: the fetched rows become a
+    # dense local pool and the original ids' sign carries the mask
+    local_ids = jnp.where(ids >= 0, jnp.arange(ids.shape[0]), -1)
+    return paged_attention_ref(q[None], rows, local_ids[None],
+                               scale=scale, causal=causal)[0]

@@ -8,21 +8,18 @@ import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.kernels.common import interpret_mode
 
 from . import kernel
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def paged_gather(pages: jax.Array, ids: jax.Array, shift: int, mesh: Mesh,
-                 axis: str = "x") -> jax.Array:
+                 axis: str = "x", interpret: bool | None = None) -> jax.Array:
     """Global pages [p, n_pages, w], ids [p, k] int32 → [p, k, w]: each rank
     gathers rows `ids[r]` from rank (r+shift)'s pool as one fused block."""
     n = mesh.shape[axis]
     fn = functools.partial(kernel.paged_gather_pallas, shift=shift, axis=axis,
-                           n=n, interpret=_interpret())
+                           n=n, interpret=interpret_mode(interpret))
     return jax.jit(
         shard_map(
             lambda b, i: fn(b[0], i[0])[None],

@@ -8,18 +8,18 @@ import jax
 from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels.common import interpret_mode
+
 from .kernel import ring_matmul_pallas
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def ring_matmul(x_t: jax.Array, w: jax.Array, mesh: Mesh, axis: str = "x") -> jax.Array:
+def ring_matmul(x_t: jax.Array, w: jax.Array, mesh: Mesh, axis: str = "x",
+                interpret: bool | None = None) -> jax.Array:
     """Y = x_t.T @ concat(w shards): x_t [K, m] replicated; w [K, N] sharded
     on dim 0 over `axis`.  Returns [m, N] replicated (identical per rank)."""
     n = mesh.shape[axis]
-    fn = functools.partial(ring_matmul_pallas, axis=axis, n=n, interpret=_interpret())
+    fn = functools.partial(ring_matmul_pallas, axis=axis, n=n,
+                           interpret=interpret_mode(interpret))
     return jax.jit(
         shard_map(
             fn, mesh=mesh,

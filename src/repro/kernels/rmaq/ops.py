@@ -8,12 +8,9 @@ import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.kernels.common import interpret_mode
 
 from . import kernel
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _sm(mesh, fn, in_specs, out_specs):
@@ -23,27 +20,30 @@ def _sm(mesh, fn, in_specs, out_specs):
 
 
 def notified_put(x: jax.Array, cnt: jax.Array, shift: int, mesh: Mesh,
-                 axis: str = "x") -> tuple[jax.Array, jax.Array]:
+                 axis: str = "x",
+                 interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
     """Global x [p*rows, ...], cnt [p] int32: each shard + its count put to
     rank (r+shift)%p with notification.  Returns (delivered, counts)."""
     n = mesh.shape[axis]
     fn = functools.partial(kernel.notified_put_pallas, shift=shift, axis=axis,
-                           n=n, interpret=_interpret())
+                           n=n, interpret=interpret_mode(interpret))
     xs = P(axis, *([None] * (x.ndim - 1)))
     return _sm(mesh, fn, (xs, P(axis)), (xs, P(axis)))(x, cnt)
 
 
 def notify_accumulate(cnt: jax.Array, local: jax.Array, shift: int, mesh: Mesh,
-                      axis: str = "x") -> jax.Array:
+                      axis: str = "x",
+                      interpret: bool | None = None) -> jax.Array:
     """Counter-only notification: local[r] + cnt[(r-shift)%p]."""
     n = mesh.shape[axis]
     fn = functools.partial(kernel.notify_accumulate_pallas, shift=shift,
-                           axis=axis, n=n, interpret=_interpret())
+                           axis=axis, n=n, interpret=interpret_mode(interpret))
     return _sm(mesh, fn, (P(axis), P(axis)), P(axis))(cnt, local)
 
 
 def queue_push(buf: jax.Array, ctr: jax.Array, msgs: jax.Array, shift: int,
-               mesh: Mesh, axis: str = "x", capacity: int | None = None):
+               mesh: Mesh, axis: str = "x", capacity: int | None = None,
+               interpret: bool | None = None):
     """Ring-slot enqueue toward rank (r+shift)%p.
 
     buf [p, capacity, w], ctr [p, 2] int32, msgs [p, k, w] (k msgs per rank).
@@ -51,11 +51,12 @@ def queue_push(buf: jax.Array, ctr: jax.Array, msgs: jax.Array, shift: int,
     """
     n = mesh.shape[axis]
     cap = capacity if capacity is not None else buf.shape[1]
+    imode = interpret_mode(interpret)
 
     def body(b, c, m):
         ob, oc, sent, notif = kernel.queue_push_pallas(
             b[0], c[0], m[0], shift=shift, axis=axis, n=n, capacity=cap,
-            interpret=_interpret())
+            interpret=imode)
         return ob[None, :cap], oc[None], sent, notif  # drop the trash row
 
     out = _sm(

@@ -6,14 +6,13 @@ import functools
 
 import jax
 
+from repro.kernels.common import interpret_mode
+
 from .kernel import ssm_scan_pallas
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-@functools.partial(jax.jit, static_argnames=("block_d", "block_t"))
-def ssm_scan(decay, drive, c, block_d: int = 256, block_t: int = 128):
+@functools.partial(jax.jit, static_argnames=("block_d", "block_t", "interpret"))
+def ssm_scan(decay, drive, c, block_d: int = 256, block_t: int = 128,
+             interpret: bool | None = None):
     return ssm_scan_pallas(decay, drive, c, block_d=block_d, block_t=block_t,
-                           interpret=_interpret())
+                           interpret=interpret_mode(interpret))

@@ -41,6 +41,12 @@ RATE_TOL = 100.0
 # (see PerfModel.p_queue_enqueue / p_enqueue_credit / p_append_paged).
 WIRE_TRANSFERS_PER_FUSED_APPEND = 2
 
+# The §13 fused paged-attention kernel stages pages through a double
+# buffer: at most this many KV pages are ever resident in decode staging,
+# independent of the request's block length (the gather baseline stages
+# pages_per_block).  Structural, so gated at COUNT_TOL.
+FUSED_STAGING_PAGES = 2
+
 
 def _entry(bench: str, metric: str, predicted: float, observed: float,
            tol: float = COUNT_TOL, gate: bool = True) -> dict:
@@ -123,6 +129,31 @@ def _collect_rmem(doc: dict) -> list[dict]:
                 "rmem", f"{mode}.wire_transfers_per_append",
                 WIRE_TRANSFERS_PER_FUSED_APPEND,
                 d["wire_transfers_per_append"]))
+    # §13 fused-vs-gather decode staging bound: the fused kernel's window
+    # is the double-buffer (<= FUSED_STAGING_PAGES resident), the gather
+    # baseline materializes the whole block.  Structural, so COUNT_TOL.
+    dec = doc.get("decode")
+    if dec is not None:
+        ppb = int(dec["pages_per_block"])
+        page_nbytes = float(dec["page_nbytes"])
+        for path, pages in (("fused", min(FUSED_STAGING_PAGES, ppb)),
+                            ("gather", ppb)):
+            d = dec.get(path)
+            if d is None:
+                continue
+            out.append(_entry(
+                "rmem", f"decode.{path}.staging_pages_resident",
+                pages, d["staging_pages_resident"]))
+            out.append(_entry(
+                "rmem", f"decode.{path}.staging_bytes_per_decode",
+                pages * page_nbytes, d["staging_bytes_per_decode"]))
+            out.append(_entry(
+                "rmem", f"decode.{path}.wire_transfers_per_append",
+                WIRE_TRANSFERS_PER_FUSED_APPEND,
+                d["wire_transfers_per_append"]))
+        # measured attend_us stays out of the table: interpret-mode CPU
+        # wall clock vs a TPU model is noise, not drift — the modeled
+        # fused/gather costs live in BENCH_rmem.json's decode.model block
     return out
 
 

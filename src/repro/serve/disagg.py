@@ -65,6 +65,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.kernels.common import interpret_mode
+from repro.kernels.paged_attention import kernel as pattn
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry
 from repro.rmaq import channel as rch
@@ -89,10 +91,27 @@ class DisaggConfig:
     page_tokens: int = 4          # tokens per KV page (divides block_tokens)
     novel_slots: int = 2          # novel pages a prefill rank ships per step
     pool_pages: int = 32          # pages per decode-rank pool
+    # decode attention path (paged mode, DESIGN.md §13): "fused" walks the
+    # page table inside one Pallas kernel (2-page staging window, no packed
+    # KV block); "gather" is the A/B baseline that materializes the block
+    # (`rpg.gather_local`) and attends over the copy
+    attend: str = "fused"
 
     @property
     def pages_per_block(self) -> int:
         return self.block_tokens // self.page_tokens
+
+    @property
+    def staging_pages_resident(self) -> int:
+        """Peak KV pages resident in decode staging per request: the fused
+        kernel's double-buffer window vs the gather path's full block."""
+        if self.attend == "fused":
+            return min(2, self.pages_per_block)
+        return self.pages_per_block
+
+    @property
+    def staging_nbytes(self) -> int:
+        return self.staging_pages_resident * self.page_nbytes
 
     @property
     def page_nbytes(self) -> int:
@@ -146,6 +165,9 @@ class DisaggEngine:
                 raise ValueError(
                     f"pool_pages {cfg.pool_pages} < pages_per_block "
                     f"{cfg.pages_per_block}: no request could ever map")
+            if cfg.attend not in ("fused", "gather"):
+                raise ValueError(
+                    f"attend must be 'fused' or 'gather', got {cfg.attend!r}")
         self.n_decode = self.p - cfg.n_prefill
 
         key = jax.random.PRNGKey(seed)
@@ -193,6 +215,7 @@ class DisaggEngine:
             self.channel, self.qstate = rch.channel_allocate(
                 mesh, axis, cfg.queue_capacity, lanes)
             self.fstate = None
+        self._attend_step = None      # set by _build_step in paged mode
         self._step = self._build_step()
         # trace-time message accounting: the KV shipping rides the queue's
         # epoch-scoped plans (DESIGN.md §8), so one abstract trace tells us
@@ -254,11 +277,13 @@ class DisaggEngine:
             return readout(params, kv_in, mask, batch.tag)
 
         if cfg.paged:
-            def step(params, qstate, fstate, pool, ptab, req_id, dest, lane,
+            def ship(params, qstate, fstate, pool, ptab, req_id, dest, lane,
                      novel_toks, novel_slot, novel_dest):
-                """Paged step: scatter novel KV pages into decoder pools,
-                append the page TABLE over the channel, decode by local
-                page gather.  All per-rank [1, ...] inputs except pool."""
+                """Paged shipping step: scatter novel KV pages into decoder
+                pools, append the page TABLE over the channel, drain my
+                ring.  Attention runs in the separate `_attend_step` (host-
+                timed per decode step).  All per-rank [1, ...] inputs
+                except pool."""
                 me = jax.lax.axis_index(axis)
                 qstate = rq.to_local(qstate)
                 fstate = rfl.to_local(fstate)
@@ -282,34 +307,68 @@ class DisaggEngine:
                     ptab[0][None], rid[None], dest_eff[None], lane[0],
                 )
 
-                # 3. decode: drain tables, gather my pool's pages, read out
+                # 3. drain: the received page tables ARE the decode input
                 qstate, fstate, batch = rfl.recv(
                     ch, qstate, fstate, cfg.max_recv_per_step)
                 entries, mask = ch.payload_all(batch)      # [m, ppb, 2] i32
-                mine = entries[..., rpg.ENTRY_OWNER] == me
-                ids = jnp.where(mask[:, None] & mine,
-                                entries[..., rpg.ENTRY_PAGE], -1)
-                kv_in = rpg.gather_local(pool_l, ids)      # [m, ppb, pt, 2, d]
-                m = kv_in.shape[0]
-                kv_in = kv_in.reshape(m, cfg.block_tokens, 2, cfg.d_model)
-                out_req, out_tok = readout(params, kv_in, mask, batch.tag)
                 sent_ok = receipt.accepted[0] & is_prefill
                 return (
                     rq.to_global(qstate), rfl.to_global(fstate), pool_l[None],
-                    out_req[None], out_tok[None], sent_ok[None],
-                    receipt.rejected[None],
+                    entries[None], mask[None], batch.tag[None],
+                    sent_ok[None], receipt.rejected[None],
                 )
 
+            def attend(params, pool, entries, mask, tags):
+                """Paged decode attention: page table -> token, by the
+                configured path.  "fused" hands the pool + id list straight
+                to the paged-attention kernel (scale 1.0 = this engine's
+                unscaled toy readout; the kernel's online softmax == the
+                readout's dense softmax on all-valid tables); "gather"
+                materializes the packed block first — the A/B baseline."""
+                me = jax.lax.axis_index(axis)
+                pool_l = pool[0]
+                e, msk, tg = entries[0], mask[0], tags[0]
+                mine = e[..., rpg.ENTRY_OWNER] == me
+                ids = jnp.where(msk[:, None] & mine,
+                                e[..., rpg.ENTRY_PAGE], -1)
+                if cfg.attend == "gather":
+                    kv_in = rpg.gather_local(pool_l, ids)  # [m, ppb, pt, 2, d]
+                    m = kv_in.shape[0]
+                    kv_in = kv_in.reshape(m, cfg.block_tokens, 2, cfg.d_model)
+                    out_req, out_tok = readout(params, kv_in, msk, tg)
+                else:
+                    q = jnp.broadcast_to(
+                        params["w_q"], (ids.shape[0], 1, cfg.d_model))
+                    ctx = pattn.paged_attention_pallas(
+                        q, pool_l, ids, scale=1.0, causal=False,
+                        interpret=interpret_mode())[:, 0]  # [m, d]
+                    logits = ctx @ params["readout"]       # [m, vocab]
+                    out_tok = jnp.where(
+                        msk, jnp.argmax(logits, -1).astype(jnp.int32), -1)
+                    out_req = jnp.where(msk, tg, -1)
+                return out_req[None], out_tok[None]
+
             pspec = P(axis, None, None, None, None)
+            self._attend_step = jax.jit(
+                shard_map(
+                    attend,
+                    mesh=self.mesh,
+                    in_specs=(P(), pspec, P(axis, None, None, None),
+                              P(axis, None), P(axis, None)),
+                    out_specs=(P(axis, None), P(axis, None)),
+                    check_vma=False,
+                )
+            )
             return jax.jit(
                 shard_map(
-                    step,
+                    ship,
                     mesh=self.mesh,
                     in_specs=(P(), qspecs, fspecs, pspec,
                               P(axis, None, None), P(axis), P(axis),
                               P(axis, None), P(axis, None, None),
                               P(axis, None), P(axis, None)),
-                    out_specs=(qspecs, fspecs, pspec, P(axis, None),
+                    out_specs=(qspecs, fspecs, pspec,
+                               P(axis, None, None, None), P(axis, None),
                                P(axis, None), P(axis), P(axis, None)),
                     check_vma=False,
                 )
@@ -456,10 +515,13 @@ class DisaggEngine:
         self._t_last_result = now
 
     def serve_metrics(self) -> dict:
-        """Request-latency summaries (§12): TTFT and TBT in microseconds."""
+        """Request-latency summaries (§12): TTFT and TBT in microseconds,
+        plus the per-decode-step attention latency (paged mode; empty
+        summary otherwise)."""
         return {
             "ttft_us": self.metrics.histogram("serve.ttft_us").summary(),
             "tbt_us": self.metrics.histogram("serve.tbt_us").summary(),
+            "attend_us": self.metrics.histogram("serve.attend_us").summary(),
         }
 
     def _host_credits(self) -> np.ndarray:
@@ -588,7 +650,7 @@ class DisaggEngine:
             self.appends += 1
             appended[r] = job["rid"]
 
-        (self.qstate, self.fstate, self.pool, out_req, out_tok, sent_ok,
+        (self.qstate, self.fstate, self.pool, entries, mask, tags, sent_ok,
          rejected) = self._step(
             self.params, self.qstate, self.fstate, self.pool,
             jnp.asarray(ptab), jnp.asarray(req_id), jnp.asarray(dest),
@@ -607,7 +669,18 @@ class DisaggEngine:
             self._rank_job[r] = None        # the prefill rank frees up
             del self._jobs[rid]
 
+        # decode attention, host-timed per step: the fused-vs-gather A/B
+        # lever lives entirely inside this call (DESIGN.md §13)
+        t0 = time.perf_counter()
+        out_req, out_tok = self._attend_step(
+            self.params, self.pool, entries, mask, tags)
         out_req, out_tok = np.asarray(out_req), np.asarray(out_tok)
+        attend_us = (time.perf_counter() - t0) * 1e6
+        self.metrics.histogram("serve.attend_us").observe(attend_us)
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("serve.decode.attend", us=int(attend_us),
+                     path=cfg.attend, staging_pages=cfg.staging_pages_resident)
         emitted = 0
         for rr in range(cfg.n_prefill, p):
             for rid, tok in zip(out_req[rr], out_tok[rr]):
@@ -746,6 +819,10 @@ class DisaggEngine:
             return {}
         ks = self.kv.stats()
         return {
+            "attend_path": self.cfg.attend,
+            "pages_per_block": self.cfg.pages_per_block,
+            "staging_pages_resident": self.cfg.staging_pages_resident,
+            "staging_bytes_per_decode": self.cfg.staging_nbytes,
             "appends": self.appends,
             "steps": self.steps_run,
             "novel_pages_shipped": self.novel_pages_shipped,

@@ -196,3 +196,47 @@ except DrainError as e:
           f"pool conservation OK")
 else:
     raise AssertionError("paged run_until_drained returned despite max_steps=2")
+
+# ---- §13 fused paged attention A/B: same tokens, same wire fingerprint,
+# staging window shrinks from the whole block to the 2-page double buffer
+from repro.obs.trace import Tracer
+
+cfg9 = DisaggConfig(n_prefill=n // 2, block_tokens=8, d_model=16, vocab=61,
+                    queue_capacity=8, max_recv_per_step=2, n_lanes=2,
+                    flow=True, paged=True, page_tokens=2, novel_slots=2,
+                    pool_pages=32, attend="gather")
+eng9 = DisaggEngine(mesh, "serve", cfg9, seed=3)
+for rid, toks in prompts6.items():
+    eng9.submit(rid, toks)
+res9 = eng9.run_until_drained()
+assert res9 == res6, "gather attend path diverged from fused tokens"
+ps9 = eng9.paged_stats()
+assert ps6["attend_path"] == "fused" and ps9["attend_path"] == "gather"
+assert ps6["pages_per_block"] == ps9["pages_per_block"] == 4
+assert ps6["staging_pages_resident"] == 2       # fused: double buffer only
+assert ps9["staging_pages_resident"] == 4       # gather: whole block staged
+assert ps9["staging_bytes_per_decode"] == 2 * ps6["staging_bytes_per_decode"]
+# attention path choice must not change the RMA protocol fingerprint
+assert eng9.msg_stats["wire_msgs_per_step"] == eng6.msg_stats["wire_msgs_per_step"]
+m6, m9 = eng6.serve_metrics(), eng9.serve_metrics()
+assert m6["attend_us"]["count"] > 0 and m6["attend_us"]["p50"] > 0
+assert m9["attend_us"]["count"] > 0
+print(f"PASS fused==gather attend A/B: staging {ps9['staging_bytes_per_decode']}"
+      f" -> {ps6['staging_bytes_per_decode']} bytes/decode, "
+      f"attend_us p50 fused={m6['attend_us']['p50']:.0f} "
+      f"gather={m9['attend_us']['p50']:.0f}")
+
+# traced run emits per-step serve.decode.attend without perturbing tokens
+with Tracer() as tr:
+    engT = DisaggEngine(mesh, "serve", cfg6, seed=3)
+    for rid, toks in prompts6.items():
+        engT.submit(rid, toks)
+    resT = engT.run_until_drained()
+assert resT == res6, "tracing perturbed the fused attend path"
+evs = tr.named("serve.decode.attend")
+assert len(evs) > 0
+assert all(e["args"]["path"] == "fused" and e["args"]["staging_pages"] == 2
+           for e in evs)
+assert all(e["args"]["us"] >= 0 for e in evs)
+print(f"PASS attend tracing: {len(evs)} serve.decode.attend events, "
+      f"tokens unchanged under tracing")

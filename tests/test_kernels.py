@@ -57,6 +57,43 @@ def test_flash_attention_block_shape_invariance(bq, bk, s):
     assert float(jnp.max(jnp.abs(a - b))) < 2e-3
 
 
+def test_effective_blocks_never_exceed_seq():
+    """Satellite regression: dispatch clamps tiles to the sequence lengths."""
+    from repro.kernels.flash_attention.ops import effective_blocks
+
+    assert effective_blocks(7, 9) == (7, 9)
+    assert effective_blocks(1024, 2048) == (512, 512)
+    assert effective_blocks(64, 512, block_q=128, block_k=256) == (64, 256)
+    for sq in (1, 3, 500, 512, 513):
+        bq, bk = effective_blocks(sq, sq)
+        assert bq <= sq and bk <= sq
+
+
+@pytest.mark.parametrize("S,causal", [(1, True), (7, True), (13, False)])
+def test_flash_attention_default_blocks_on_short_seq(S, causal):
+    """Decode-sized seqs through the DEFAULT 512 blocks: clamped, exact."""
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, 2, S, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, S, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, S, 32), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal)   # block_q/block_k = 512
+    ref = attention_ref(q, k, v, causal=causal)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-3
+
+
+def test_interpret_mode_override():
+    """Satellite: one cached env probe, per-call override wins over it."""
+    from repro.kernels import common
+
+    assert common.interpret_mode(True) is True
+    assert common.interpret_mode(False) is False
+    auto = common.interpret_mode()
+    assert isinstance(auto, bool)
+    assert common.interpret_mode() is auto          # probe result is cached
+    assert common.interpret_mode(not auto) is (not auto)
+    assert common.interpret_mode() is auto          # override didn't stick
+
+
 def test_flash_attention_grads_flow():
     q = jax.random.normal(RNG, (1, 2, 64, 32), jnp.float32)
 

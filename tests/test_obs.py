@@ -447,3 +447,43 @@ class TestServeLatencyMetrics:
         assert {"serve.request.submit", "serve.request.first_token",
                 "serve.request.drain"} <= names
         assert doc["metadata"]["clock_domain"] == "wall_us"
+
+
+# ===================================================== attend-step latency
+class TestAttendLatencyHistogram:
+    """§13 per-decode-step `serve.attend_us` rides the same exact-order-
+    statistics histogram as TTFT/TBT: nearest-rank percentiles, no bucket
+    error, empty-safe summaries."""
+
+    def test_exact_nearest_rank_percentiles(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("serve.attend_us")
+        vals = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0, 4.0, 6.0, 10.0]
+        for v in vals:
+            h.observe(v)
+        xs = sorted(vals)
+        for q in (0, 50, 90, 99, 100):
+            rank = max(0, min(len(xs) - 1,
+                              int(round(q / 100.0 * (len(xs) - 1)))))
+            assert h.percentile(q) == xs[rank]
+        s = h.summary()
+        # nearest-rank on n=10: p50 -> rank round(4.5)=4, p90 -> 8, p99 -> 9
+        assert s == {"count": 10, "sum": 55.0, "min": 1.0, "max": 10.0,
+                     "p50": 5.0, "p90": 9.0, "p99": 10.0}
+
+    def test_registry_get_or_create_accumulates(self):
+        reg = MetricsRegistry()
+        reg.histogram("serve.attend_us").observe(3.0)
+        reg.histogram("serve.attend_us").observe(4.0)   # same instance
+        assert reg.histogram("serve.attend_us").summary()["count"] == 2
+
+    def test_empty_attend_histogram_is_zero_summary(self):
+        s = Histogram().summary()
+        assert s["count"] == 0
+        assert all(s[k] == 0.0 for k in ("sum", "min", "max", "p50", "p90",
+                                         "p99"))
+
+    def test_single_observation_all_percentiles_equal(self):
+        h = Histogram()
+        h.observe(42.0)
+        assert h.percentile(50) == h.percentile(99) == 42.0

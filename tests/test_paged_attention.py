@@ -1,0 +1,133 @@
+"""Fused paged attention (DESIGN.md §13): Pallas kernel vs oracles.
+
+Correctness is pinned three ways, all in interpret mode:
+
+  * the pure-jnp oracle (`paged_attention_ref`) across page counts 1–64,
+    masked pages, causal and non-causal, decode (Sq=1) and chunked shapes;
+  * the gather-then-flash baseline — identical math when every page is
+    valid, compared at Sq == Sk where the two causal conventions (offset
+    tril vs raw ``q_pos >= k_pos``) coincide;
+  * the cross-rank streamed variant vs the shift oracle AND vs
+    paged_gather + local fused attention, via a 5-device subprocess
+    subtest (shifts 1..4 are all distinct on 5 ranks).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+from .helpers import given, run_subtest, settings, st
+
+RNG = jax.random.PRNGKey(7)
+
+
+def _pool(m, k, pt, hd, Sq, n_pages, seed=0):
+    ks = jax.random.split(jax.random.fold_in(RNG, seed), 3)
+    q = jax.random.normal(ks[0], (m, Sq, hd), jnp.float32)
+    kv = jax.random.normal(ks[1], (n_pages, pt, 2, hd), jnp.float32)
+    ids = jax.random.randint(ks[2], (m, k), 0, n_pages, jnp.int32)
+    return q, kv, ids
+
+
+# ------------------------------------------------------ fused vs jnp oracle
+@pytest.mark.parametrize(
+    "m,k,pt,hd,Sq,causal",
+    [
+        (1, 1, 4, 64, 1, False),     # single page, single decode query
+        (3, 4, 4, 64, 1, False),     # batched decode: Sq=1, 16-token window
+        (2, 8, 2, 64, 16, True),     # causal at Sq == Sk
+        (1, 4, 4, 64, 5, True),      # causal suffix: Sq < Sk (offset tril)
+        (2, 16, 4, 128, 4, False),   # MXU-width head, chunked queries
+        (1, 64, 2, 64, 1, False),    # 64-page table walk
+        (2, 3, 8, 64, 24, True),     # odd page count, causal Sq == Sk
+    ],
+)
+def test_paged_attention_matches_oracle(m, k, pt, hd, Sq, causal):
+    q, kv, ids = _pool(m, k, pt, hd, Sq, n_pages=max(2 * k, 8), seed=k)
+    out = paged_attention(q, kv, ids, causal=causal)
+    ref = paged_attention_ref(q, kv, ids, causal=causal)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_paged_attention_masked_pages(causal):
+    """Negative ids drop whole pages from the softmax (not clamp-to-page-0)."""
+    m, k, pt, hd, Sq = 3, 6, 4, 64, 8
+    q, kv, ids = _pool(m, k, pt, hd, Sq, n_pages=16, seed=11)
+    ids = ids.at[0, 2].set(-1).at[1, 0].set(-1).at[1, 5].set(-1)
+    out = paged_attention(q, kv, ids, causal=causal)
+    ref = paged_attention_ref(q, kv, ids, causal=causal)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+    # and the masked result must differ from the unmasked one (mask is live)
+    ref_full = paged_attention_ref(q, kv, jnp.abs(ids), causal=causal)
+    assert float(jnp.max(jnp.abs(out - ref_full))) > 1e-3
+
+
+def test_paged_attention_fully_masked_row_is_zero():
+    m, k, pt, hd, Sq = 2, 4, 4, 64, 2
+    q, kv, ids = _pool(m, k, pt, hd, Sq, n_pages=8, seed=13)
+    ids = ids.at[1].set(-1)                     # row 1: empty key set
+    out = paged_attention(q, kv, ids)
+    assert float(jnp.max(jnp.abs(out[1]))) == 0.0
+    ref = paged_attention_ref(q, kv, ids)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+# ------------------------------------------- fused vs gather+flash baseline
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("k,pt", [(2, 8), (4, 4), (8, 2)])
+def test_paged_attention_matches_gather_flash(k, pt, causal):
+    """The kernel == materialize-the-block-then-flash, without the block.
+
+    Sq == Sk so the flash kernel's raw causal mask and the paged kernel's
+    offset convention coincide.
+    """
+    m, hd = 2, 64
+    Sq = k * pt
+    q, kv, ids = _pool(m, k, pt, hd, Sq, n_pages=2 * k, seed=17)
+    out = paged_attention(q, kv, ids, causal=causal)
+    rows = kv[ids]                              # [m, k, pt, 2, hd] packed
+    k_in = rows[:, :, :, 0].reshape(m, Sq, hd)
+    v_in = rows[:, :, :, 1].reshape(m, Sq, hd)
+    base = flash_attention(q[:, None], k_in[:, None], v_in[:, None],
+                           causal=causal, block_q=32, block_k=32)[:, 0]
+    assert float(jnp.max(jnp.abs(out - base))) < 2e-3
+
+
+# ---------------------------------------------------------- property sweep
+@given(
+    k=st.sampled_from([1, 2, 3, 5, 8, 16, 32, 64]),
+    pt=st.sampled_from([1, 2, 4, 8]),
+    masked=st.sampled_from([0, 1, 2]),
+)
+@settings(max_examples=12, deadline=None)
+def test_paged_attention_page_count_invariance(k, pt, masked):
+    """Property: correctness must not depend on the table length/geometry."""
+    m, hd, Sq = 2, 64, 1
+    q, kv, ids = _pool(m, k, pt, hd, Sq, n_pages=max(2 * k, 4),
+                       seed=1000 * k + 10 * pt + masked)
+    for j in range(min(masked, k - 1)):
+        ids = ids.at[:, j].set(-1)
+    out = paged_attention(q, kv, ids)
+    ref = paged_attention_ref(q, kv, ids)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+def test_paged_attention_scale_is_applied():
+    m, k, pt, hd, Sq = 1, 2, 4, 64, 1
+    q, kv, ids = _pool(m, k, pt, hd, Sq, n_pages=4, seed=23)
+    out = paged_attention(q, kv, ids, scale=1.0)
+    ref = paged_attention_ref(q, kv, ids, scale=1.0)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+    default = paged_attention(q, kv, ids)       # 1/sqrt(hd) != 1.0
+    assert float(jnp.max(jnp.abs(out - default))) > 1e-3
+
+
+# ------------------------------------------------- cross-rank streamed walk
+def test_paged_attention_shift_streams_remote_pages():
+    # 5 ranks so shifts 1..4 are all distinct non-identity rotations
+    run_subtest("paged_attention_sub.py", devices=5)
