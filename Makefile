@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-smoke sim-smoke sim-chaos lint example-disagg
+.PHONY: test test-fast bench bench-smoke sim-smoke sim-chaos lint check example-disagg
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -46,6 +46,18 @@ sim-chaos:
 
 lint:
 	ruff check src tests benchmarks examples
+
+# static + runtime memory-model checking (DESIGN.md §14): the repo lint
+# pass, the six protocols under the shadow race checker (must be clean),
+# and the tear fault under the checker (must be CAUGHT)
+check:
+	$(PYTHON) -m repro.analysis.lint src/repro
+	$(PYTHON) -m repro.sim.conformance --smoke --check-races
+	$(PYTHON) -m repro.sim.conformance --ranks 256 \
+		--protocols queue,flow,heap,epoch,lock,kv \
+		--schedules reorder --seeds 0 --check-races
+	$(PYTHON) -m repro.sim.conformance --ranks 64 --schedules tear \
+		--protocols queue,epoch --seeds 0 --check-races --expect-fail
 
 example-disagg:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \

@@ -169,6 +169,55 @@ def run_engine(n: int, paged: bool, n_req: int = 12,
     }
 
 
+# --------------------------------------------------- shadow-mode overhead
+def shadow_overhead(p: int = 8, rounds: int = 400) -> dict:
+    """Events/sec through `LocalFabric` with the §14 race checker attached
+    vs detached — the cost of running every protocol under the shadow.
+
+    The loop is the conformance access mix: cross-rank puts and accs, a
+    get, a flush and a notification per rank per round, a fence per round.
+    """
+    import time
+
+    from repro.core.fabric import LocalFabric
+
+    def drive(attach: bool) -> tuple[float, int]:
+        fab = LocalFabric(p=p)
+        fab.register("win", np.zeros((p, 8), np.int64))
+        chk = None
+        if attach:
+            from repro.analysis.races import RaceChecker
+            chk = fab.attach_shadow(RaceChecker(p))
+        # disjoint cells per op kind: clean under the checker by
+        # construction (put=0, acc=1, get reads untouched 2, notify ctr=3)
+        n_ops = 0
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for r in range(p):
+                dst = (r + 1) % p
+                fab.put(r, dst, "win", (0,), 1)
+                fab.add(r, dst, "win", (1,), 1)
+                fab.flush_remote(r)
+                fab.get(r, dst, "win", (2,))
+                fab.fence_add(dst, "win", (3,), 1)
+                n_ops += 5
+            fab.fence()
+            n_ops += 1
+        dt = time.perf_counter() - t0
+        if chk is not None:
+            assert chk.violations == [], chk.violations[:3]
+        return n_ops / dt, (chk.events if chk is not None else 0)
+
+    off, _ = drive(False)
+    on, seen = drive(True)
+    return {
+        "events_per_s_off": off,
+        "events_per_s_on": on,
+        "overhead_x": off / on,
+        "shadow_events_observed": seen,
+    }
+
+
 # ------------------------------------------------- fused-vs-gather decode
 def decode_series(n: int, paged_fused: dict) -> dict:
     """The DESIGN.md §13 A/B: the same shared-prefix workload decoded by
@@ -225,6 +274,7 @@ def main() -> None:
     inline = run_engine(n, paged=False)
     paged = run_engine(n, paged=True)
     decode = decode_series(n, paged)
+    shadow = shadow_overhead()
 
     cfg_block, cfg_ppb = 16 * 2 * 32 * 4.0, 4
     model = {
@@ -254,6 +304,7 @@ def main() -> None:
                 1.0 - paged["bytes_wire_per_req"] / inline["bytes_wire_per_req"],
         },
         "model": model,
+        "shadow": shadow,
     }
     with open("BENCH_rmem.json", "w") as f:
         json.dump(out, f, indent=2, default=float)
@@ -267,6 +318,10 @@ def main() -> None:
              f"bytes_wire_per_req={r['bytes_wire_per_req']:.0f};"
              f"payload_per_req={r['effective_payload_bytes_per_req']:.0f};"
              f"wire_per_append={r['wire_transfers_per_append']}")
+    emit("rmem_shadow_overhead", shadow["overhead_x"],
+         f"events_per_s_off={shadow['events_per_s_off']:.0f};"
+         f"events_per_s_on={shadow['events_per_s_on']:.0f};"
+         f"events={shadow['shadow_events_observed']}")
     for path in ("fused", "gather"):
         d = decode[path]
         emit(f"rmem_decode_{path}", d["attend_us"]["p50"],

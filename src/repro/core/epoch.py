@@ -121,8 +121,17 @@ class _PlanScope:
     _plan = None
 
     def begin_plan(self, strategist: Any = None):
-        from .plan import RmaPlan  # lazy: plan.py imports epoch classes
+        from .plan import PlanError, RmaPlan  # lazy: plan.py imports epoch
 
+        # epoch-misuse guard: silently replacing an unflushed plan would
+        # drop its recorded ops on the floor — nested begin_plan without a
+        # flush is a program bug, not a fresh scope
+        if self._plan is not None and not self._plan.flushed:
+            raise PlanError(
+                f"begin_plan on axis {self.axis!r}: the epoch's previous "
+                f"plan still holds {len(self._plan.ops)} unflushed recorded "
+                "op(s) — close the epoch (or flush the plan) before "
+                "beginning a new one")
         self._plan = RmaPlan(self.axis, model=self.model, strategist=strategist)
         return self._plan
 
@@ -154,8 +163,16 @@ class FenceEpoch(_PlanScope):
         self.p = p
         self.model = model
         self.stats = SyncStats()
+        self._open = False
 
     def open(self, tree: Any) -> Any:
+        from .plan import PlanError  # lazy: plan.py imports epoch classes
+
+        if self._open:
+            raise PlanError(
+                f"fence epoch on axis {self.axis!r} is already open — "
+                "close() the current epoch before opening another")
+        self._open = True
         tr = obs_trace.TRACER
         if tr.enabled:
             tr.event("epoch.fence.open", axis=self.axis, p=self.p)
@@ -167,6 +184,13 @@ class FenceEpoch(_PlanScope):
         # scalar psum on the axis.
         import math
 
+        from .plan import PlanError  # lazy: plan.py imports epoch classes
+
+        if not self._open:
+            raise PlanError(
+                f"double fence on axis {self.axis!r}: close() called with "
+                "no open epoch — every close must pair with one open()")
+        self._open = False
         with obs_trace.TRACER.span("epoch.fence.close", axis=self.axis, p=self.p) as sp:
             self._flush_plan()
             tree = _barrier_all(tree)

@@ -69,9 +69,21 @@ class Fabric:
         self.regions: dict[str, Any] = {}       # name -> array indexed [rank, ...]
         self.banks: dict[str, list] = {}        # name -> [_AtomicWord, ...]
         self.bank_owner: dict[str, int] = {}
+        self.bank_semantics: dict[str, str] = {}  # name -> "amo" | "lock"
         self.ops = OpCounter()                  # payload-plane accounting (private)
         self.sync = SyncStats()                 # sync-plane accounting (private)
         self.epoch = 0                          # fences completed
+        # optional passive observer (analysis.races.RaceChecker): sees every
+        # op/AMO/notification/sync but never touches the ledgers — snapshots
+        # are byte-identical with or without a shadow attached
+        self.shadow: Any = None
+
+    def attach_shadow(self, shadow: Any) -> Any:
+        """Attach a shadow checker; returns it (for chaining)."""
+        self.shadow = shadow
+        if shadow is not None and hasattr(shadow, "bind"):
+            shadow.bind(self)
+        return shadow
 
     # ------------------------------------------------------------ registry
     def register(self, name: str, store) -> None:
@@ -80,12 +92,17 @@ class Fabric:
             raise FabricError(f"region {name!r} already registered")
         self.regions[name] = store
 
-    def register_words(self, name: str, words: list, owner: int = 0) -> list:
+    def register_words(self, name: str, words: list, owner: int = 0,
+                       semantics: str = "amo") -> list:
         """Expose a bank of `_AtomicWord`s (an AMO-addressable window).
 
         The caller keeps (and may share) the word objects — `LocalFabric`
         operates on them directly, preserving thread-safety and per-word
         ``amo_count`` for the O(1)-expected-AMOs assertions.
+
+        ``semantics="lock"`` declares the bank's words as lock words in the
+        paper's Fig. 3 layout; a shadow race checker then decodes the AMO
+        deltas into acquire/release state and enforces lock discipline.
         """
         if name in self.banks:
             raise FabricError(f"bank {name!r} already registered")
@@ -93,6 +110,7 @@ class Fabric:
             raise FabricError("banks hold locks_sim._AtomicWord instances")
         self.banks[name] = list(words)
         self.bank_owner[name] = owner
+        self.bank_semantics[name] = semantics
         return self.banks[name]
 
     def _store(self, name: str):
@@ -167,25 +185,39 @@ class LocalFabric(Fabric):
     def put(self, src: int, dst: int, region: str, idx, value) -> None:
         self._store(region)[dst][idx] = value
         self._count("puts", src=src, dst=dst, region=region)
+        if self.shadow is not None:
+            self.shadow.access("put", src, dst, region, idx)
 
     def add(self, src: int, dst: int, region: str, idx, delta) -> None:
         apply_add(self._store(region)[dst], idx, delta)
         self._count("accs", src=src, dst=dst, region=region)
+        if self.shadow is not None:
+            self.shadow.access("acc", src, dst, region, idx)
 
     def fence_add(self, dst: int, region: str, idx, delta) -> None:
         """Accumulate ordered after this epoch's one-way ops to `dst`
         (write-with-notification: counter visibility implies payload
-        visibility).  Locally everything already applied, so: a plain add."""
-        self.add(dst, dst, region, idx, delta)
+        visibility).  Locally everything already applied, so: a plain add
+        (inlined so the shadow sees one acc + one notification, with the
+        ledger accounting byte-identical to the delegated form)."""
+        apply_add(self._store(region)[dst], idx, delta)
+        self._count("accs", src=dst, dst=dst, region=region)
+        if self.shadow is not None:
+            prov = self.shadow.access("acc", dst, dst, region, idx)
+            self.shadow.notify(dst, self.epoch, prov=prov)
 
     def get(self, src: int, dst: int, region: str, idx=()):
         out = self._store(region)[dst][idx] if idx != () else self._store(region)[dst]
         self._count("gets", src=src, dst=dst, region=region)
+        if self.shadow is not None:
+            self.shadow.access("get", src, dst, region, idx)
         return np.copy(out)
 
     def gather(self, src: int, region: str):
         """Window-wide read (the reservation gather): one fused transfer."""
         self._count("gets", src=src, region=region)
+        if self.shadow is not None:
+            self.shadow.read_all(src, region)
         return np.copy(self._store(region))
 
     # -------------------------------------------------------------- AMOs
@@ -193,15 +225,26 @@ class LocalFabric(Fabric):
     # as before the fabric seam — `HostPagePool.total_amos` is unchanged.
     def read_word(self, src: int, bank: str, i: int) -> int:
         self._count_amo("read", src, bank, i)
-        return self._word(bank, i).read()
+        out = self._word(bank, i).read()
+        if self.shadow is not None:
+            self.shadow.amo(src, bank, i, "read", result=out)
+        return out
 
     def fetch_add(self, src: int, bank: str, i: int, delta: int) -> int:
         self._count_amo("fetch_add", src, bank, i)
-        return self._word(bank, i).fetch_add(delta)
+        out = self._word(bank, i).fetch_add(delta)
+        if self.shadow is not None:
+            self.shadow.amo(src, bank, i, "fetch_add", delta=delta,
+                            result=out)
+        return out
 
     def cas(self, src: int, bank: str, i: int, expected: int, new: int) -> int:
         self._count_amo("cas", src, bank, i)
-        return self._word(bank, i).cas(expected, new)
+        out = self._word(bank, i).cas(expected, new)
+        if self.shadow is not None:
+            self.shadow.amo(src, bank, i, "cas", expected=expected,
+                            value=new, result=out)
+        return out
 
     # -------------------------------------------------------------- sync
     def flush(self, src: int) -> None:
@@ -209,13 +252,19 @@ class LocalFabric(Fabric):
         if tr.enabled:
             tr.event("fabric.flush", rank=src)
         SyncStats.record("flush_msgs", also=self.sync)
+        if self.shadow is not None:
+            self.shadow.sync("flush", src)
 
     def flush_remote(self, src: int) -> None:
         """MPI_Win_flush: locally everything is already remotely complete."""
         self.flush(src)
+        if self.shadow is not None:
+            self.shadow.sync("flush_remote", src)
 
     def fence(self) -> None:
         self._account_fence()
+        if self.shadow is not None:
+            self.shadow.sync("fence")
 
 
 def default_fabric(fabric: Optional[Fabric], p: int = 1) -> Fabric:

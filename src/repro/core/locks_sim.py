@@ -19,7 +19,9 @@ from __future__ import annotations
 
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
+from typing import Iterator
 
 from repro.obs import trace as obs_trace
 
@@ -33,6 +35,15 @@ GLOBAL_SHRD_MASK = (1 << 32) - 1
 # refcount path that never releases its writer) fails loudly with held-state
 # diagnostics instead of hanging the tier-1 run forever.
 DEFAULT_MAX_RETRIES = 30_000
+
+
+class LockStateError(RuntimeError):
+    """A release that does not match any lock this origin holds.
+
+    Without this guard a double-release silently corrupts the shared
+    reader count / writer bit and the corruption surfaces later as an
+    unrelated timeout; the race checker's lock-discipline rule flags the
+    same pattern fabric-side."""
 
 
 class LockTimeout(RuntimeError):
@@ -125,6 +136,16 @@ class LockOrigin:
         self.win = win
         self.rank = rank
         self.excl_held = 0  # nesting count of exclusive locks held
+        self.shr_held: dict[int, int] = {}  # shared holds per target
+        self.all_held = 0   # nesting count of lock_all holds
+
+    def _lock_event(self, phase: str, mode: str, target: int) -> None:
+        """Success-path trace: `analysis.ir.from_trace` lowers these into
+        `IRLockEvent`s for the static lock-discipline pass."""
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event(f"lock.{phase}", rank=self.rank, mode=mode,
+                     target=target)
 
     def _timeout(self, op: str, target: int | None, t0: float,
                  attempts: int) -> LockTimeout:
@@ -168,6 +189,8 @@ class LockOrigin:
             old = self.win.local[target].fetch_add(1)
             if not (old & WRITER_BIT):
                 self._contended("lock_shared", target, t0, attempt)
+                self.shr_held[target] = self.shr_held.get(target, 0) + 1
+                self._lock_event("acquire", "shared", target)
                 return  # acquired
             # writer active: back off and retry (paper: remote reads + backoff)
             self.win.local[target].fetch_add(-1)
@@ -176,7 +199,14 @@ class LockOrigin:
         raise self._timeout("lock_shared", target, t0, max_retries)
 
     def unlock_shared(self, target: int) -> None:
+        if self.shr_held.get(target, 0) <= 0:
+            raise LockStateError(
+                f"rank {self.rank}: unlock_shared({target}) without a "
+                "matching lock_shared — releasing would corrupt the "
+                "reader count")
+        self.shr_held[target] -= 1
         self.win.local[target].fetch_add(-1)
+        self._lock_event("release", "shared", target)
 
     # ---------------------------------------------------------- exclusive
     def lock_exclusive(self, target: int, backoff: float = 1e-6,
@@ -203,6 +233,7 @@ class LockOrigin:
                 self.win.holder[target] = self.rank   # diagnostics (§ timeout)
                 self.excl_held += 1
                 self._contended("lock_exclusive", target, t0, attempt)
+                self._lock_event("acquire", "exclusive", target)
                 return
             # failed: release global registration and retry both invariants
             if self.excl_held == 0:
@@ -212,11 +243,18 @@ class LockOrigin:
         raise self._timeout("lock_exclusive", target, t0, max_retries)
 
     def unlock_exclusive(self, target: int) -> None:
+        if self.excl_held <= 0 or self.win.holder[target] != self.rank:
+            raise LockStateError(
+                f"rank {self.rank}: unlock_exclusive({target}) without "
+                "holding the writer bit (holder: "
+                f"{self.win.holder[target]}) — releasing would hand the "
+                "lock to nobody")
         self.win.holder[target] = -1
         self.win.local[target].fetch_add(-WRITER_BIT)
         self.excl_held -= 1
         if self.excl_held == 0:
             self.win.master.fetch_add(-GLOBAL_EXCL_UNIT)
+        self._lock_event("release", "exclusive", target)
 
     # -------------------------------------------------------------- lockall
     def lock_all(self, backoff: float = 1e-6,
@@ -230,6 +268,8 @@ class LockOrigin:
             old = self.win.master.fetch_add(1)
             if old < GLOBAL_EXCL_UNIT:  # no exclusive holders
                 self._contended("lock_all", None, t0, attempt)
+                self.all_held += 1
+                self._lock_event("acquire", "all", -1)
                 return
             self.win.master.fetch_add(-1)
             time.sleep(backoff)
@@ -237,4 +277,38 @@ class LockOrigin:
         raise self._timeout("lock_all", None, t0, max_retries)
 
     def unlock_all(self) -> None:
+        if self.all_held <= 0:
+            raise LockStateError(
+                f"rank {self.rank}: unlock_all without a matching "
+                "lock_all — releasing would corrupt the lockall count")
+        self.all_held -= 1
         self.win.master.fetch_add(-1)
+        self._lock_event("release", "all", -1)
+
+    # --------------------------------------------- exception-safe wrappers
+    @contextmanager
+    def exclusive(self, target: int, **kw) -> Iterator["LockOrigin"]:
+        """``with origin.exclusive(t):`` — release guaranteed on ANY exit
+        path; the lint rule ANL002 accepts only this form or an explicit
+        try/finally."""
+        self.lock_exclusive(target, **kw)
+        try:
+            yield self
+        finally:
+            self.unlock_exclusive(target)
+
+    @contextmanager
+    def shared(self, target: int, **kw) -> Iterator["LockOrigin"]:
+        self.lock_shared(target, **kw)
+        try:
+            yield self
+        finally:
+            self.unlock_shared(target)
+
+    @contextmanager
+    def all_shared(self, **kw) -> Iterator["LockOrigin"]:
+        self.lock_all(**kw)
+        try:
+            yield self
+        finally:
+            self.unlock_all()

@@ -137,6 +137,11 @@ class _RecordedOp:
     handle: RmaHandle
     finalize: Callable      # delivered array -> handle result
     shift: Optional[int] = None   # set when sig is a uniform-shift ppermute
+    # target byte interval [lo, hi) on the destination window; None means
+    # the op's own disjoint slot of the fused buffer (the §8 layout).  Set
+    # via the record methods' ``at=`` to model aliasing protocols — the
+    # `analysis.ir` lowering turns this into the access IR's byte-interval.
+    at: Optional[tuple] = None
 
     @property
     def nbytes(self) -> int:
@@ -253,7 +258,8 @@ class RmaPlan:
     def pending(self) -> int:
         return 0 if self.flushed else len(self.ops)
 
-    def _record(self, kind, sig, payload, finalize=None, shift=None) -> RmaHandle:
+    def _record(self, kind, sig, payload, finalize=None, shift=None,
+                at=None) -> RmaHandle:
         if self.flushed:
             raise PlanError("plan already flushed")
         tr = obs_trace.TRACER
@@ -263,7 +269,8 @@ class RmaPlan:
         h = RmaHandle()
         self.ops.append(
             _RecordedOp(kind, sig, self.axis, payload, h,
-                        finalize or (lambda d: d), shift=shift)
+                        finalize or (lambda d: d), shift=shift,
+                        at=None if at is None else (int(at[0]), int(at[1])))
         )
         return h
 
@@ -271,15 +278,19 @@ class RmaPlan:
         n = compat.axis_size(self.axis)
         return tuple((i, (i + shift) % n) for i in range(n))
 
-    def put_shift(self, x: Array, shift: int, kind: str = "puts") -> RmaHandle:
-        """Record: put `x` to rank (r+shift) mod p; resolves to what landed here."""
+    def put_shift(self, x: Array, shift: int, kind: str = "puts",
+                  at: Optional[tuple] = None) -> RmaHandle:
+        """Record: put `x` to rank (r+shift) mod p; resolves to what landed
+        here.  ``at=(lo, hi)`` declares the target byte interval for the
+        `analysis.ir` race lowering (default: the op's own disjoint slot)."""
         return self._record(kind, ("ppermute", self._shift_perm(shift)), x,
-                            shift=shift)
+                            shift=shift, at=at)
 
     def put_perm(self, x: Array, perm: Sequence[tuple[int, int]],
-                 kind: str = "puts") -> RmaHandle:
+                 kind: str = "puts", at: Optional[tuple] = None) -> RmaHandle:
         """Record: put along an arbitrary (src, dst) permutation."""
-        return self._record(kind, ("ppermute", tuple(tuple(p) for p in perm)), x)
+        return self._record(kind, ("ppermute", tuple(tuple(p) for p in perm)),
+                            x, at=at)
 
     def get_shift(self, x: Array, shift: int) -> RmaHandle:
         """Record: get from rank (r+shift) mod p (the symmetric SPMD put)."""
@@ -541,29 +552,39 @@ class AccessEpoch:
         return self.sync.unlock(tree)
 
     # record API (delegated)
-    def put_shift(self, x, shift, kind="puts"):
-        return self.plan.put_shift(x, shift, kind=kind)
+    def _rec(self) -> RmaPlan:
+        # epoch-misuse guard: the closing flush already issued this epoch's
+        # plan, so a late record would silently miss the epoch's sync
+        if self.plan.flushed:
+            raise PlanError(
+                f"{self.family} epoch on axis {self.axis!r} already closed "
+                "— op recorded after close() would never be synchronized "
+                "by this epoch")
+        return self.plan
 
-    def put_perm(self, x, perm, kind="puts"):
-        return self.plan.put_perm(x, perm, kind=kind)
+    def put_shift(self, x, shift, kind="puts", at=None):
+        return self._rec().put_shift(x, shift, kind=kind, at=at)
+
+    def put_perm(self, x, perm, kind="puts", at=None):
+        return self._rec().put_perm(x, perm, kind=kind, at=at)
 
     def get_shift(self, x, shift):
-        return self.plan.get_shift(x, shift)
+        return self._rec().get_shift(x, shift)
 
     def accumulate_shift(self, x, acc, shift, op=jnp.add):
-        return self.plan.accumulate_shift(x, acc, shift, op)
+        return self._rec().accumulate_shift(x, acc, shift, op)
 
     def accumulate_perm(self, x, acc, perm, op=jnp.add):
-        return self.plan.accumulate_perm(x, acc, perm, op)
+        return self._rec().accumulate_perm(x, acc, perm, op)
 
     def fetch_and_op(self, x, target, op=jnp.add):
-        return self.plan.fetch_and_op(x, target, op)
+        return self._rec().fetch_and_op(x, target, op)
 
     def put_all_to_all(self, x, kind="colls"):
-        return self.plan.put_all_to_all(x, kind=kind)
+        return self._rec().put_all_to_all(x, kind=kind)
 
     def all_gather(self, x, kind="gets"):
-        return self.plan.all_gather(x, kind=kind)
+        return self._rec().all_gather(x, kind=kind)
 
     def predicted_cost(self) -> float:
         return self.sync.predicted_cost()

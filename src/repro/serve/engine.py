@@ -138,8 +138,7 @@ class ServeEngine:
     # ------------------------------------------------- locked state sections
     def _alloc_slot(self) -> Optional[tuple[Request, int]]:
         """Exclusive section: claim (queue head, free slot), or None."""
-        self.lock.lock_exclusive(0)
-        try:
+        with self.lock.exclusive(0):
             if self.queue.empty() or not any(self.slot_free):
                 return None
             try:
@@ -151,8 +150,6 @@ class ServeEngine:
             self.slot_ready[slot] = False
             self.slot_req[slot] = req
             return req, slot
-        finally:
-            self.lock.unlock_exclusive(0)
 
     def _recycle(self, slot: int) -> None:
         """Writer section: free a finished lane.  MUST run inside an
@@ -192,8 +189,7 @@ class ServeEngine:
             if claim is None:
                 return admitted
             req, slot = claim
-            self.lock.lock_shared(0)
-            try:
+            with self.lock.shared(0):
                 plen = len(req.prompt)
                 tokens = jnp.zeros((self.max_seq,), jnp.int32).at[:plen].set(
                     jnp.asarray(req.prompt, jnp.int32)
@@ -224,20 +220,14 @@ class ServeEngine:
                     # scheduler could emit an extra token — or recycle the
                     # lane before our exclusive recycle below runs)
                     self.slot_ready[slot] = True
-            finally:
-                self.lock.unlock_shared(0)
             if len(req.output) >= req.max_new:
-                self.lock.lock_exclusive(0)
-                try:
+                with self.lock.exclusive(0):
                     self._recycle(slot)
-                finally:
-                    self.lock.unlock_exclusive(0)
             admitted += 1
 
     def step(self) -> int:
         """One decode step over all active lanes; returns #tokens emitted."""
-        self.lock.lock_shared(0)
-        try:
+        with self.lock.shared(0):
             active = [i for i in range(self.n_slots)
                       if not self.slot_free[i] and self.slot_ready[i]]
             if not active:
@@ -267,16 +257,11 @@ class ServeEngine:
                 emitted += 1
                 if len(req.output) >= req.max_new or self.slot_pos[i] >= self.max_seq - 1:
                     finished.append(i)
-        finally:
-            self.lock.unlock_shared(0)
         if finished:
             # exclusive-lock section: recycle the finished lanes
-            self.lock.lock_exclusive(0)
-            try:
+            with self.lock.exclusive(0):
                 for i in finished:
                     self._recycle(i)
-            finally:
-                self.lock.unlock_exclusive(0)
         return emitted
 
     def serve_metrics(self) -> dict:

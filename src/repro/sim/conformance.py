@@ -69,12 +69,14 @@ class RunSpec:
     n_ranks: int
     schedule: str
     seed: int
+    check_races: bool = False
 
     def repro(self) -> str:
         return (
             "PYTHONPATH=src python -m repro.sim.conformance "
             f"--protocols {self.protocol} --ranks {self.n_ranks} "
             f"--schedules {self.schedule} --seeds {self.seed}"
+            + (" --check-races" if self.check_races else "")
         )
 
 
@@ -96,10 +98,18 @@ def _rng(seed: int, salt: int) -> random.Random:
     return random.Random(seed * 1_000_003 + salt)
 
 
+# the harness stashes each run's shadow race checker here so the driver
+# (`_run_protocol`) can finalize it after the protocol returns
+_SHADOWS: list = []
+
+
 def _harness(spec: RunSpec, on_event):
     clock = VirtualClock()
     fab = SimFabric(spec.n_ranks, SCHEDULES[spec.schedule], spec.seed,
                     clock=clock)
+    if spec.check_races:
+        from repro.analysis.races import RaceChecker
+        _SHADOWS.append(fab.attach_shadow(RaceChecker(spec.n_ranks)))
     sched = Scheduler(spec.seed, clock=clock, on_event=on_event)
     sched.attach(fab)
     return fab, sched
@@ -479,8 +489,8 @@ def run_lock(spec: RunSpec, rounds: int = 2) -> dict:
     fab, sched = _harness(spec, None)
     master = _AtomicWord()
     local = [_AtomicWord() for _ in range(p)]
-    fab.register_words("lock.master", [master])
-    fab.register_words("lock.local", local)
+    fab.register_words("lock.master", [master], semantics="lock")
+    fab.register_words("lock.local", local, semantics="lock")
     cells = np.zeros((p, 1), np.int64)
     fab.register("lock.cell", cells)
     commits = np.zeros(p, np.int64)
@@ -642,8 +652,29 @@ PROTOCOLS = {
 }
 
 
+def _run_protocol(spec: RunSpec, **overrides) -> dict:
+    """Invoke one protocol runner; under ``check_races`` finalize the
+    shadow `RaceChecker` the harness attached, turning any memory-model
+    violation into a `ConformanceError` with the same repro line."""
+    _SHADOWS.clear()
+    try:
+        report = PROTOCOLS[spec.protocol](spec, **overrides)
+    finally:
+        shadow = _SHADOWS.pop() if _SHADOWS else None
+    if shadow is not None:
+        shadow.finish()
+        if shadow.violations:
+            raise ConformanceError(
+                spec, -1,
+                f"race checker: {len(shadow.violations)} RMA memory-model "
+                "violation(s):\n  "
+                + "\n  ".join(str(v) for v in shadow.violations))
+        report["races_checked"] = shadow.events
+    return report
+
+
 def run_one(protocol: str, n_ranks: int, schedule: str, seed: int,
-            tracer=None, **overrides) -> dict:
+            tracer=None, check_races: bool = False, **overrides) -> dict:
     """Run one conformance spec, optionally under an `obs` tracer.
 
     The tracer is installed as the global tracer for the run's duration;
@@ -654,18 +685,19 @@ def run_one(protocol: str, n_ranks: int, schedule: str, seed: int,
         raise ValueError(f"unknown protocol {protocol!r} (have {sorted(PROTOCOLS)})")
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r} (have {sorted(SCHEDULES)})")
-    spec = RunSpec(protocol, n_ranks, schedule, seed)
+    spec = RunSpec(protocol, n_ranks, schedule, seed, check_races)
     if tracer is None:
-        return PROTOCOLS[protocol](spec, **overrides)
+        return _run_protocol(spec, **overrides)
     prev = obs_trace.set_tracer(tracer)
     try:
-        return PROTOCOLS[protocol](spec, **overrides)
+        return _run_protocol(spec, **overrides)
     finally:
         obs_trace.set_tracer(prev)
 
 
 def run_suite(protocols, n_ranks: int, schedules, seeds,
-              trace_dir: str | None = None) -> list[dict]:
+              trace_dir: str | None = None,
+              check_races: bool = False) -> list[dict]:
     from repro.core.fabric import FabricError
     from repro.sim.sched import SchedulerError
 
@@ -673,7 +705,8 @@ def run_suite(protocols, n_ranks: int, schedules, seeds,
     for protocol in protocols:
         for schedule in schedules:
             for seed in seeds:
-                spec = RunSpec(protocol, n_ranks, schedule, seed)
+                spec = RunSpec(protocol, n_ranks, schedule, seed,
+                               check_races)
                 entry = {"spec": spec, "ok": True, "error": None}
                 # with a trace dir, every run records under a fresh tracer
                 # so a failing run's trace can be exported post-mortem
@@ -681,7 +714,7 @@ def run_suite(protocols, n_ranks: int, schedules, seeds,
                 prev = (obs_trace.set_tracer(tracer)
                         if tracer is not None else None)
                 try:
-                    entry["report"] = PROTOCOLS[protocol](spec)
+                    entry["report"] = _run_protocol(spec)
                 except ConformanceError as e:
                     entry.update(ok=False, error=e)
                 except (SchedulerError, FabricError) as e:
@@ -718,6 +751,10 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-fail", action="store_true",
                     help="exit 0 IFF at least one violation is caught "
                          "(fault-injection schedules like 'tear')")
+    ap.add_argument("--check-races", action="store_true",
+                    help="attach the repro.analysis race checker as a "
+                         "fabric shadow; any MPI-3 memory-model violation "
+                         "fails the run with descriptor provenance")
     ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"),
                     help="append a markdown summary to this file")
     ap.add_argument("--trace-dir", default=None,
@@ -739,7 +776,8 @@ def main(argv=None) -> int:
             seeds = [int(s) for s in args.seeds.split(",") if s]
 
     results = run_suite(protocols, ranks, schedules, seeds,
-                        trace_dir=args.trace_dir)
+                        trace_dir=args.trace_dir,
+                        check_races=args.check_races)
     lines = []
     n_fail = 0
     for r in results:

@@ -131,6 +131,11 @@ class SimFabric(Fabric):
 
     def put(self, src: int, dst: int, region: str, idx, value) -> None:
         self._count("puts", src=src, dst=dst, region=region)
+        if self.shadow is not None:
+            # wire=True binds the payload to its transfer batch (staged/
+            # applied hooks) for the notify-before-payload rule
+            self.shadow.access("put", src, dst, region, idx,
+                               wire=(src != dst))
         op = (dst, region, idx, np.copy(value) if isinstance(value, np.ndarray) else value, "put")
         if src == dst:
             self._apply_op(op)          # local memory: no wire
@@ -139,6 +144,9 @@ class SimFabric(Fabric):
 
     def add(self, src: int, dst: int, region: str, idx, delta) -> None:
         self._count("accs", src=src, dst=dst, region=region)
+        if self.shadow is not None:
+            self.shadow.access("acc", src, dst, region, idx,
+                               wire=(src != dst))
         op = (dst, region, idx, delta, "add")
         if src == dst:
             self._apply_op(op)
@@ -148,11 +156,15 @@ class SimFabric(Fabric):
     def get(self, src: int, dst: int, region: str, idx=()):
         """Round-trip read of the *target-visible* (delivered) state."""
         self._count("gets", src=src, dst=dst, region=region)
+        if self.shadow is not None:
+            self.shadow.access("get", src, dst, region, idx)
         out = self._store(region)[dst][idx] if idx != () else self._store(region)[dst]
         return np.copy(out)
 
     def gather(self, src: int, region: str):
         self._count("gets", src=src, region=region)
+        if self.shadow is not None:
+            self.shadow.read_all(src, region)
         return np.copy(self._store(region))
 
     # ------------------------------------------------------------ transfers
@@ -168,6 +180,8 @@ class SimFabric(Fabric):
         epoch = self.epoch
         self._outstanding[(dst, epoch)] = self._outstanding.get((dst, epoch), 0) + 1
         entry = {"src": src, "dst": dst, "ops": ops, "epoch": epoch, "seq": seq}
+        if self.shadow is not None:
+            self.shadow.staged(src, dst, seq, len(ops))
         if c.drop_p and self.rng.random() < c.drop_p:
             # first copy lost on the wire; the retransmit hook re-sends the
             # SAME sequence number after a timeout — late, never gone.  The
@@ -212,6 +226,8 @@ class SimFabric(Fabric):
                      seq=seq, n_ops=len(entry["ops"]))
         for op in entry["ops"]:
             self._apply_op(op)
+        if self.shadow is not None:
+            self.shadow.applied(seq)
         key = (entry["dst"], entry["epoch"])
         left = self._outstanding.get(key, 0) - 1
         if left > 0:
@@ -227,6 +243,8 @@ class SimFabric(Fabric):
             if not self._pending_to(entry["dst"]):
                 for dst, region, idx, delta in self._gated.pop(key, []):
                     self._apply_op((dst, region, idx, delta, "add"))
+                    if self.shadow is not None:
+                        self.shadow.notify(dst, entry["epoch"])
                     self._notify({"kind": "notify", "src": dst, "dst": dst,
                                   "epoch": entry["epoch"]})
         return True
@@ -281,10 +299,14 @@ class SimFabric(Fabric):
 
     def fence_add(self, dst: int, region: str, idx, delta) -> None:
         self._count("accs", src=dst, dst=dst, region=region)
+        if self.shadow is not None:
+            self.shadow.access("acc", dst, dst, region, idx)
         if self.chaos.tear or not self._dst_has_epoch_traffic(dst):
             # tear fault: publish the notification WITHOUT waiting for the
             # payloads it advertises — the §6.1 guarantee, violated
             self._apply_op((dst, region, idx, delta, "add"))
+            if self.shadow is not None:
+                self.shadow.notify(dst, self.epoch)
         else:
             self._gated.setdefault((dst, self.epoch), []).append(
                 (dst, region, idx, delta))
@@ -292,11 +314,18 @@ class SimFabric(Fabric):
     # -------------------------------------------------------------- AMOs
     def read_word(self, src: int, bank: str, i: int) -> int:
         self._count_amo("read", src, bank, i)
-        return self._word(bank, i).read()
+        out = self._word(bank, i).read()
+        if self.shadow is not None:
+            self.shadow.amo(src, bank, i, "read", result=out)
+        return out
 
     def fetch_add(self, src: int, bank: str, i: int, delta: int) -> int:
         self._count_amo("fetch_add", src, bank, i)
-        return self._word(bank, i).fetch_add(delta)
+        out = self._word(bank, i).fetch_add(delta)
+        if self.shadow is not None:
+            self.shadow.amo(src, bank, i, "fetch_add", delta=delta,
+                            result=out)
+        return out
 
     def cas(self, src: int, bank: str, i: int, expected: int, new: int) -> int:
         self._count_amo("cas", src, bank, i)
@@ -306,8 +335,17 @@ class SimFabric(Fabric):
             tr = obs_trace.TRACER
             if tr.enabled:
                 tr.event("sim.cas_spurious_fail", rank=src, bank=bank, i=i)
+            if self.shadow is not None:
+                # applied=False: the word was not written — acquire-only
+                self.shadow.amo(src, bank, i, "cas", expected=expected,
+                                value=new, result=(expected + 1),
+                                applied=False)
             return (expected + 1) & ((1 << 64) - 1)
-        return self._word(bank, i).cas(expected, new)
+        out = self._word(bank, i).cas(expected, new)
+        if self.shadow is not None:
+            self.shadow.amo(src, bank, i, "cas", expected=expected,
+                            value=new, result=out)
+        return out
 
     # -------------------------------------------------------------- sync
     def flush(self, src: int) -> None:
@@ -320,6 +358,8 @@ class SimFabric(Fabric):
         if tr.enabled:
             tr.event("fabric.flush", rank=src)
         SyncStats.record("flush_msgs", also=self.sync)
+        if self.shadow is not None:
+            self.shadow.sync("flush", src)
         pending = self._pending.pop(src, [])
         if not pending:
             return
@@ -339,6 +379,8 @@ class SimFabric(Fabric):
         applied at its target before this returns."""
         self.flush(src)
         self._drain_inflight(src)
+        if self.shadow is not None:
+            self.shadow.sync("flush_remote", src)
 
     def fence(self) -> None:
         """Epoch close: complete everything, everywhere, then advance."""
@@ -349,6 +391,8 @@ class SimFabric(Fabric):
         if any(self._gated.values()):
             raise FabricError(f"fence left gated notifications: {self._gated}")
         self._account_fence()
+        if self.shadow is not None:
+            self.shadow.sync("fence")
 
     # ---------------------------------------------------------- inspection
     def chaos_stats(self) -> dict:

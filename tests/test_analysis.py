@@ -1,0 +1,481 @@
+"""repro.analysis: memory-model checker + access IR + lint (ISSUE 8).
+
+Falsifiability anchors (the checker must be able to FAIL):
+
+  * a hand-written racy two-rank program is flagged with the exact
+    conflicting descriptor pair (both provenance strings);
+  * the `tear` chaos schedule is flagged as notify-before-payload;
+  * all six conformance protocols run CLEAN under the checker at 256
+    simulated ranks;
+  * the fabric ledgers are byte-identical with and without the shadow
+    attached (golden-trace compatibility).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.analysis import ir as air
+from repro.analysis import lint
+from repro.analysis.races import (RaceChecker, check_ir, conflicts)
+from repro.core import plan as plan_mod
+from repro.core.fabric import LocalFabric
+from repro.core.locks_sim import (WRITER_BIT, LockOrigin, LockStateError,
+                                  LockWindow, _AtomicWord)
+from repro.obs import trace as obs_trace
+from repro.sim import conformance as conf
+from repro.sim.fabric import SCHEDULES, SimFabric
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _local(p=3, cells=4):
+    fab = LocalFabric(p=p)
+    fab.register("win", np.zeros((p, cells), np.int64))
+    return fab, fab.attach_shadow(RaceChecker(p))
+
+
+def _sim(schedule, p=4, cells=4):
+    fab = SimFabric(p, SCHEDULES[schedule], seed=0)
+    fab.register("win", np.zeros((p, cells), np.int64))
+    fab.register("ctr", np.zeros((p, 1), np.int64))
+    return fab, fab.attach_shadow(RaceChecker(p))
+
+
+# ========================================================== conflict matrix
+class TestConflictMatrix:
+    def test_mpi3_conflict_table(self):
+        # reads don't conflict with reads; atomics don't conflict with
+        # atomics; any pair involving put / local-write conflicts
+        assert not conflicts("get", "get")
+        assert not conflicts("get", "local-read")
+        assert not conflicts("acc", "acc")
+        assert not conflicts("acc", "fao")
+        assert not conflicts("get", "acc")      # both atomic
+        assert conflicts("put", "put")
+        assert conflicts("put", "get")
+        assert conflicts("put", "acc")
+        assert conflicts("local-write", "get")
+        assert conflicts("local-write", "acc")
+
+
+# ================================================== crafted racy program
+class TestCraftedRace:
+    def test_two_rank_overlapping_puts_flagged_with_both_descriptors(self):
+        """The falsifiability anchor: a hand-written racy two-rank program
+        MUST be flagged, naming the exact conflicting descriptor pair."""
+        fab, chk = _local()
+        fab.put(0, 2, "win", (1,), 7)
+        fab.put(1, 2, "win", (1,), 9)
+        assert len(chk.violations) == 1
+        v = chk.violations[0]
+        assert v.rule == "unsynchronized-conflict"
+        assert "put(src=0, dst=2" in v.a          # descriptor A, exactly
+        assert "put(src=1, dst=2" in v.b          # descriptor B, exactly
+        assert "bytes=[8:16)" in v.a              # int64 cell 1
+
+    def test_fence_separates_the_epochs(self):
+        fab, chk = _local()
+        fab.put(0, 2, "win", (1,), 7)
+        fab.fence()
+        fab.put(1, 2, "win", (1,), 9)
+        assert chk.violations == []
+
+    def test_disjoint_bytes_do_not_conflict(self):
+        fab, chk = _local()
+        fab.put(0, 2, "win", (0,), 7)
+        fab.put(1, 2, "win", (1,), 9)
+        assert chk.violations == []
+
+    def test_put_get_conflict_flagged(self):
+        fab, chk = _local()
+        fab.put(0, 2, "win", (1,), 7)
+        fab.get(1, 2, "win", (1,))
+        assert [v.rule for v in chk.violations] == ["unsynchronized-conflict"]
+
+    def test_accumulates_commute(self):
+        fab, chk = _local()
+        fab.add(0, 2, "win", (1,), 1)
+        fab.add(1, 2, "win", (1,), 1)
+        fab.get(0, 2, "win", (1,))                # get is an atomic read
+        assert chk.violations == []
+
+
+# ===================================================== same-origin ordering
+class TestSameOriginOrdering:
+    def test_local_flush_does_not_order_remote_writes(self):
+        """MPI_Win_flush_local completes the *source buffer*, not the
+        target: back-to-back overlapping puts need flush_remote/fence."""
+        fab, chk = _local()
+        fab.put(0, 2, "win", (1,), 1)
+        fab.flush(0)
+        fab.put(0, 2, "win", (1,), 2)
+        assert [v.rule for v in chk.violations] == ["same-origin-overlap"]
+
+    def test_flush_remote_orders_them(self):
+        fab, chk = _local()
+        fab.put(0, 2, "win", (1,), 1)
+        fab.flush_remote(0)
+        fab.put(0, 2, "win", (1,), 2)
+        assert chk.violations == []
+
+
+# ======================================================== src-buffer reuse
+class TestSrcBufferReuse:
+    def test_rewrite_before_flush_flagged(self):
+        _, chk = _local()
+        buf = np.arange(4, dtype=np.int64)
+        chk.access("put", 0, 1, "win", (0,), src_span=(id(buf), 0, 32))
+        chk.local_write(0, buf, 8, 16)
+        assert [v.rule for v in chk.violations] == ["src-buffer-reuse"]
+
+    def test_flush_releases_the_span(self):
+        _, chk = _local()
+        buf = np.arange(4, dtype=np.int64)
+        chk.access("put", 0, 1, "win", (0,), src_span=(id(buf), 0, 32))
+        chk.sync("flush", 0)
+        chk.local_write(0, buf, 8, 16)
+        assert chk.violations == []
+
+    def test_disjoint_span_clean(self):
+        _, chk = _local()
+        buf = np.arange(8, dtype=np.int64)
+        chk.access("put", 0, 1, "win", (0,), src_span=(id(buf), 0, 16))
+        chk.local_write(0, buf, 32, 64)
+        assert chk.violations == []
+
+
+# =================================================== notify-before-payload
+class TestNotifyBeforePayload:
+    def test_tear_schedule_flagged(self):
+        """The falsifiability anchor: the tear fault (per-op delivery,
+        ungated notification) MUST be flagged by the checker itself."""
+        fab, chk = _sim("tear")
+        fab.put(0, 1, "win", (0,), 5)
+        fab.flush(0)                        # batch in flight (time frozen)
+        fab.fence_add(1, "ctr", (0,), 1)    # tear: applies immediately
+        assert any(v.rule == "notify-before-payload" for v in chk.violations)
+        v = [v for v in chk.violations
+             if v.rule == "notify-before-payload"][0]
+        assert "put(src=0, dst=1" in v.a    # the gated payload, by name
+
+    def test_gated_schedule_clean(self):
+        fab, chk = _sim("reorder")
+        fab.put(0, 1, "win", (0,), 5)
+        fab.flush(0)
+        fab.fence_add(1, "ctr", (0,), 1)    # held until the payload lands
+        fab.fence()
+        assert chk.violations == []
+
+
+# ==================================================== lock AMO sync edges
+class TestLockHappensBefore:
+    def _locked_writers(self, sync):
+        """Two ranks take the same lock word in turn and write one cell at
+        a third rank; `sync` is called holding the lock, before unlock."""
+        fab, chk = _sim("none", p=3)
+        fab.register_words("lock", [_AtomicWord()], semantics="lock")
+        for r in (0, 1):
+            assert fab.cas(r, "lock", 0, 0, WRITER_BIT) == 0
+            fab.put(r, 2, "win", (0,), r + 1)
+            sync(fab, r)
+            fab.fetch_add(r, "lock", 0, -WRITER_BIT)
+        chk.finish()
+        return chk
+
+    def test_flush_remote_before_unlock_is_clean(self):
+        chk = self._locked_writers(lambda fab, r: fab.flush_remote(r))
+        assert chk.violations == []
+
+    def test_unlock_without_flush_remote_flagged(self):
+        # local flush only: the put is still in flight when the lock is
+        # released — the release edge publishes nothing for it
+        chk = self._locked_writers(lambda fab, r: fab.flush(r))
+        assert "unsynchronized-conflict" in {v.rule for v in chk.violations}
+
+
+# ======================================================== lock discipline
+class TestLockDiscipline:
+    def _lock_fab(self, p=2):
+        fab, chk = _sim("none", p=p)
+        fab.register_words("lock", [_AtomicWord()], semantics="lock")
+        return fab, chk
+
+    def test_writer_held_at_end_flagged(self):
+        fab, chk = self._lock_fab()
+        assert fab.cas(0, "lock", 0, 0, WRITER_BIT) == 0
+        chk.finish()
+        assert any(v.rule == "lock-discipline"
+                   and "still holds the writer bit" in v.message
+                   for v in chk.violations)
+
+    def test_shared_release_without_acquire_flagged(self):
+        fab, chk = self._lock_fab()
+        fab.fetch_add(0, "lock", 0, -1)
+        assert any(v.rule == "lock-discipline"
+                   and "does not hold" in v.message
+                   for v in chk.violations)
+
+    def test_shared_to_exclusive_upgrade_attempt_flagged(self):
+        fab, chk = self._lock_fab()
+        fab.fetch_add(0, "lock", 0, 1)            # shared acquire
+        fab.cas(0, "lock", 0, 0, WRITER_BIT)      # upgrade attempt (fails)
+        assert any(v.rule == "lock-discipline"
+                   and "shared→exclusive upgrade" in v.message
+                   for v in chk.violations)
+
+    def test_balanced_writer_is_clean(self):
+        fab, chk = self._lock_fab()
+        assert fab.cas(0, "lock", 0, 0, WRITER_BIT) == 0
+        fab.fetch_add(0, "lock", 0, -WRITER_BIT)
+        chk.finish()
+        assert chk.violations == []
+
+
+# ============================================= locks_sim exception safety
+class TestLockOriginExceptionSafety:
+    """ISSUE 8 satellite: the context-manager form releases on EVERY exit
+    path, and a defensive release raises instead of corrupting the word."""
+
+    def test_exclusive_cm_releases_on_exception(self):
+        win = LockWindow(p=2)
+        o = LockOrigin(win, rank=0)
+        with pytest.raises(ValueError):
+            with o.exclusive(1):
+                assert win.local[1].v & WRITER_BIT
+                raise ValueError("body blew up")
+        assert win.local[1].v == 0 and win.master.v == 0
+        assert win.holder[1] == -1
+
+    def test_shared_and_all_cms_release_on_exception(self):
+        win = LockWindow(p=2)
+        o = LockOrigin(win, rank=0)
+        with pytest.raises(RuntimeError):
+            with o.shared(0):
+                raise RuntimeError
+        with pytest.raises(RuntimeError):
+            with o.all_shared():
+                raise RuntimeError
+        assert win.local[0].v == 0 and win.master.v == 0
+
+    def test_unlock_shared_without_hold_raises(self):
+        o = LockOrigin(LockWindow(p=2), rank=0)
+        with pytest.raises(LockStateError, match="unlock_shared"):
+            o.unlock_shared(0)
+
+    def test_unlock_exclusive_without_hold_raises(self):
+        win = LockWindow(p=2)
+        a, b = LockOrigin(win, 0), LockOrigin(win, 1)
+        a.lock_exclusive(0)
+        with pytest.raises(LockStateError, match="unlock_exclusive"):
+            b.unlock_exclusive(0)          # not the holder
+        a.unlock_exclusive(0)
+
+    def test_unlock_all_without_hold_raises(self):
+        o = LockOrigin(LockWindow(p=2), rank=0)
+        with pytest.raises(LockStateError, match="unlock_all"):
+            o.unlock_all()
+
+
+# ================================================= golden-trace neutrality
+class TestShadowNeutrality:
+    def _drive(self, fab):
+        fab.put(0, 1, "win", (0,), 3)
+        fab.add(1, 0, "win", (1,), 2)
+        fab.get(0, 1, "win", (0,))
+        fab.flush(0)
+        fab.fence_add(1, "win", (2,), 1)
+        fab.fence()
+        return fab.snapshot()
+
+    def test_local_fabric_ledger_identical_with_shadow(self):
+        plain = LocalFabric(p=2)
+        plain.register("win", np.zeros((2, 4), np.int64))
+        shadowed, chk = _local(p=2)
+        assert self._drive(plain) == self._drive(shadowed)
+        assert chk.events > 0                 # the shadow DID observe
+
+    def test_sim_fabric_ledger_identical_with_shadow(self):
+        plain = SimFabric(2, SCHEDULES["reorder"], seed=0)
+        plain.register("win", np.zeros((2, 4), np.int64))
+        shadowed, chk = _sim("reorder", p=2)
+        assert self._drive(plain) == self._drive(shadowed)
+        assert chk.events > 0
+
+
+# ================================================ conformance integration
+class TestConformanceCheckRaces:
+    @pytest.mark.parametrize("protocol", sorted(conf.PROTOCOLS))
+    def test_protocol_clean_at_256_ranks(self, protocol):
+        report = conf.run_one(protocol, 256, "reorder", 0, check_races=True)
+        assert report["races_checked"] > 0    # the shadow was attached
+
+    def test_tear_run_fails_under_check_races(self):
+        with pytest.raises(conf.ConformanceError):
+            conf.run_one("queue", 64, "tear", 0, check_races=True)
+
+    def test_repro_line_carries_the_flag(self):
+        spec = conf.RunSpec("queue", 64, "tear", 0, check_races=True)
+        assert spec.repro().endswith("--check-races")
+
+
+# ========================================================== plan lowering
+def _op(kind, sig, at=None, n=4):
+    payload = np.zeros(n, np.float32)
+    return plan_mod._RecordedOp(kind=kind, sig=sig, axis="w",
+                                payload=payload, handle=None,
+                                finalize=lambda a: a, at=at)
+
+
+class _FakePlan:
+    def __init__(self, ops):
+        self.ops = ops
+
+
+class TestFromPlan:
+    def test_default_slots_are_race_free(self):
+        """Without explicit `at=`, every op owns a disjoint slot of the
+        fused buffer (§8 layout) — race-free by construction."""
+        ir_ = air.from_plan(_FakePlan([
+            _op("puts", ("ppermute", [(0, 1), (1, 0)])),
+            _op("puts", ("ppermute", [(0, 1), (1, 0)])),
+        ]))
+        assert ir_.p == 2 and len(ir_.accesses) == 4
+        assert check_ir(ir_) == []
+
+    def test_explicit_aliasing_intervals_flagged_with_plan_provenance(self):
+        ir_ = air.from_plan(_FakePlan([
+            _op("puts", ("ppermute", [(0, 1)]), at=(0, 16)),
+            _op("puts", ("ppermute", [(2, 1)]), at=(8, 24)),
+        ]))
+        out = check_ir(ir_)
+        assert len(out) == 1
+        assert out[0].rule == "unsynchronized-conflict"
+        assert "plan[0]" in out[0].a and "plan[1]" in out[0].b
+
+    def test_fao_and_gets_do_not_conflict(self):
+        ir_ = air.from_plan(_FakePlan([
+            _op("accs", ("local",), at=(0, 16)),
+            _op("gets", ("all_gather",), at=(0, 16)),
+        ]), p=2)
+        assert check_ir(ir_) == []
+
+
+# ========================================================= trace lowering
+class TestFromTrace:
+    def _traced(self, body):
+        tracer = obs_trace.Tracer()
+        prev = obs_trace.set_tracer(tracer)
+        try:
+            body()
+        finally:
+            obs_trace.set_tracer(prev)
+        return tracer.events
+
+    def test_cm_lock_usage_lowers_clean(self):
+        win = LockWindow(p=2)
+        o = LockOrigin(win, rank=0)
+
+        def body():
+            with o.exclusive(1):
+                pass
+            with o.shared(0):
+                pass
+
+        ir_ = air.from_trace(self._traced(body), p=2)
+        assert len(ir_.lock_events) == 4      # 2 acquires + 2 releases
+        assert check_ir(ir_) == []
+
+    def test_acquire_without_release_flagged(self):
+        win = LockWindow(p=2)
+        o = LockOrigin(win, rank=1)
+        ir_ = air.from_trace(self._traced(lambda: o.lock_exclusive(0)), p=2)
+        out = check_ir(ir_)
+        assert any("never released" in v.message for v in out)
+
+    def test_trace_upgrade_flagged(self):
+        events = [
+            {"name": "lock.acquire", "rank": 0,
+             "args": {"mode": "shared", "target": 3}},
+            {"name": "lock.acquire", "rank": 0,
+             "args": {"mode": "exclusive", "target": 3}},
+        ]
+        out = check_ir(air.from_trace(events, p=1))
+        assert any("shared→exclusive upgrade" in v.message for v in out)
+
+
+# ================================================================== lint
+class TestLint:
+    def _rules(self, src):
+        return [f.rule for f in lint.check_source(src, "x/y.py")]
+
+    def test_bare_except_flagged(self):
+        assert self._rules(
+            "try:\n    f()\nexcept:\n    pass\n") == ["ANL001"]
+
+    def test_raw_lock_acquire_flagged(self):
+        src = ("def f(lock):\n"
+               "    lock.lock_exclusive(0)\n"
+               "    work()\n")
+        assert self._rules(src) == ["ANL002"]
+
+    def test_try_finally_lock_accepted(self):
+        src = ("def f(lock):\n"
+               "    lock.lock_exclusive(0)\n"
+               "    try:\n"
+               "        work()\n"
+               "    finally:\n"
+               "        lock.unlock_exclusive(0)\n")
+        assert self._rules(src) == []
+
+    def test_cm_lock_accepted(self):
+        src = ("def f(lock):\n"
+               "    with lock.exclusive(0):\n"
+               "        work()\n")
+        assert self._rules(src) == []
+
+    def test_nested_protected_acquire_not_double_flagged(self):
+        # acquire inside a while/if is still recognized as protected
+        src = ("def f(lock):\n"
+               "    while True:\n"
+               "        lock.lock_shared(0)\n"
+               "        try:\n"
+               "            work()\n"
+               "        finally:\n"
+               "            lock.unlock_shared(0)\n")
+        assert self._rules(src) == []
+
+    def test_region_bypass_flagged(self):
+        src = ("def f(fab):\n"
+               "    fab.regions['w'][0] = 1\n")
+        assert self._rules(src) == ["ANL003"]
+
+    def test_apply_add_outside_fabric_flagged(self):
+        assert self._rules(
+            "def f(s):\n    apply_add(s, 0, 1)\n") == ["ANL003"]
+
+    def test_one_way_without_completion_flagged(self):
+        src = ("def f(fab):\n"
+               "    fab.put(0, 1, 'w', (0,), 1)\n")
+        assert self._rules(src) == ["ANL004"]
+
+    def test_one_way_with_flush_accepted(self):
+        src = ("def f(fab):\n"
+               "    fab.put(0, 1, 'w', (0,), 1)\n"
+               "    fab.flush(0)\n")
+        assert self._rules(src) == []
+
+    def test_begin_plan_never_flushed_flagged(self):
+        assert self._rules(
+            "def f(ep):\n    pl = ep.begin_plan()\n") == ["ANL005"]
+
+    def test_begin_plan_with_close_accepted(self):
+        src = ("def f(ep, t):\n"
+               "    pl = ep.begin_plan()\n"
+               "    return ep.close(t)\n")
+        assert self._rules(src) == []
+
+    def test_src_repro_is_clean(self):
+        findings = lint.check_paths([os.path.join(REPO, "src", "repro")])
+        assert findings == [], "\n".join(str(f) for f in findings)

@@ -163,3 +163,58 @@ class TestSpmdHeapErrorSurface:
         desc, state = heap.pool_allocate(_mesh(), "w", 4)
         state, _ = self._alloc_one(desc, state)
         heap.check_errors(desc, state)                     # no raise
+
+
+# ======================================================== epoch misuse guards
+class TestEpochMisuseGuards:
+    """ISSUE 8 satellite: each misuse raises `PlanError` with a message
+    precise enough to act on (what was violated, on which axis, and why
+    the op would be wrong) — instead of silently dropping or double-
+    counting ops."""
+
+    def test_op_recorded_after_epoch_close_raises(self):
+        from repro.core.plan import AccessEpoch, PlanError
+
+        ep = AccessEpoch("w", family="fence", p=4)
+        ep.plan.flush()                    # the epoch's plan is now closed
+        with pytest.raises(PlanError, match=r"fence epoch on axis 'w' "
+                                            r"already closed — op recorded "
+                                            r"after close\(\)"):
+            ep.put_shift(jnp.zeros(3), 1)
+
+    def test_nested_begin_plan_without_flush_raises(self):
+        from repro.core.epoch import FenceEpoch
+        from repro.core.plan import PlanError
+
+        ep = FenceEpoch("w", p=4)
+        pl = ep.begin_plan()
+        pl.fetch_and_op(jnp.zeros(3), jnp.ones(3))   # recorded, unflushed
+        with pytest.raises(PlanError, match=r"begin_plan on axis 'w': the "
+                                            r"epoch's previous plan still "
+                                            r"holds 1 unflushed recorded "
+                                            r"op\(s\)"):
+            ep.begin_plan()
+        pl.flush()                         # flushing clears the guard
+        assert ep.begin_plan() is not pl
+
+    def test_double_fence_close_without_open_raises(self):
+        from repro.core.epoch import FenceEpoch
+        from repro.core.plan import PlanError
+
+        ep = FenceEpoch("w", p=4)
+        t = ep.open(jnp.zeros(3))
+        t = ep.close(t)
+        with pytest.raises(PlanError, match=r"double fence on axis 'w': "
+                                            r"close\(\) called with no open "
+                                            r"epoch"):
+            ep.close(t)
+
+    def test_reopening_an_open_fence_epoch_raises(self):
+        from repro.core.epoch import FenceEpoch
+        from repro.core.plan import PlanError
+
+        ep = FenceEpoch("w", p=4)
+        t = ep.open(jnp.zeros(3))
+        with pytest.raises(PlanError, match="already open"):
+            ep.open(t)
+        ep.close(t)                        # still closable exactly once
