@@ -31,15 +31,16 @@ sim-smoke:
 		--protocols queue,epoch --seeds 0 --expect-fail
 
 # the nightly sweep: 256 ranks, many seeds (override SEED_BASE/SWEEP in CI);
-# failing runs export replay-exact Perfetto traces into TRACE_DIR (§12)
+# failing runs record under the bounded flight recorder (§15) and dump a
+# replay-exact Perfetto trace + critical-path report into TRACE_DIR
 SEED_BASE ?= 0
 SWEEP ?= 10
 TRACE_DIR ?= sim-traces
 sim-chaos:
 	$(PYTHON) -m repro.sim.conformance --ranks 256 --sweep $(SWEEP) \
 		--seed-base $(SEED_BASE) \
-		--protocols queue,flow,heap,epoch,lock,kv \
-		--trace-dir $(TRACE_DIR)
+		--protocols queue,flow,heap,epoch,lock,kv,serve \
+		--flight --trace-dir $(TRACE_DIR)
 	$(PYTHON) -m repro.sim.conformance --ranks 256 --schedules tear \
 		--protocols queue,epoch --sweep $(SWEEP) --seed-base $(SEED_BASE) \
 		--expect-fail
@@ -48,13 +49,13 @@ lint:
 	ruff check src tests benchmarks examples
 
 # static + runtime memory-model checking (DESIGN.md §14): the repo lint
-# pass, the six protocols under the shadow race checker (must be clean),
+# pass, the seven protocols under the shadow race checker (must be clean),
 # and the tear fault under the checker (must be CAUGHT)
 check:
 	$(PYTHON) -m repro.analysis.lint src/repro
 	$(PYTHON) -m repro.sim.conformance --smoke --check-races
 	$(PYTHON) -m repro.sim.conformance --ranks 256 \
-		--protocols queue,flow,heap,epoch,lock,kv \
+		--protocols queue,flow,heap,epoch,lock,kv,serve \
 		--schedules reorder --seeds 0 --check-races
 	$(PYTHON) -m repro.sim.conformance --ranks 64 --schedules tear \
 		--protocols queue,epoch --seeds 0 --check-races --expect-fail

@@ -4,6 +4,12 @@ the full `DisaggEngine`, with the §9 model's crossover — writes
 ``BENCH_serve_flow.json`` (the acceptance evidence: credit path = 0 retries
 where reject/retry pays >=1 per full-ring step, at the same 2 fused wire
 transfers per append, with msg_stats / plan-ledger counts attached).
+
+Also runs the §15 causal slice: the ``serve`` conformance protocol at 64
+simulated ranks under a tracer, re-stitched into per-request DAGs — the
+``sim_serve`` block carries per-segment TTFT breakdowns (p50/p99 virtual
+ticks, incl. fence/flush wait attribution from the sync-plane ledger),
+which `repro.obs.drift` gates against per-segment budgets.
 """
 import json
 
@@ -14,6 +20,58 @@ from benchmarks.bench_rmaq import backpressure_scenario
 from benchmarks.common import emit
 from repro.core.perfmodel import DEFAULT_MODEL
 from repro.serve.disagg import DisaggConfig, DisaggEngine
+
+# the causal slice is a fixed (ranks, schedule, seed) point: virtual time
+# makes every number below deterministic, so the drift budgets are stable
+SIM_SERVE_RANKS = 64
+SIM_SERVE_SCHEDULE = "delay"
+SIM_SERVE_SEED = 0
+
+
+def run_sim_serve() -> dict:
+    """Trace the serve conformance protocol and attribute every TTFT tick.
+
+    Returns the §15 evidence block: per-request causal DAGs must be
+    connected across ranks, each breakdown's segment sum equals its TTFT
+    exactly (virtual time), and the sync ledger accounts the fence waits.
+    """
+    from repro.obs import causal, critpath
+    from repro.obs import trace as obs_trace
+    from repro.sim.conformance import run_one
+
+    tracer = obs_trace.Tracer()
+    report = run_one("serve", SIM_SERVE_RANKS, SIM_SERVE_SCHEDULE,
+                     SIM_SERVE_SEED, tracer=tracer)
+    events = list(tracer.events)
+    dags = causal.build_dags(events)
+    breakdowns = []
+    connected = 0
+    for rid, dag in sorted(dags.items()):
+        bd = critpath.ttft_breakdown(dag)
+        if bd is None:                     # not a completed request
+            continue
+        connected += bool(dag.connected())
+        cp, _ = critpath.critical_path(dag)
+        bd["critical_path"] = cp
+        bd["wall"] = dag.wall()
+        breakdowns.append(bd)
+    ledger = critpath.SyncLedger.from_events(events)
+    agg = critpath.aggregate(breakdowns)
+    return {
+        "ranks": SIM_SERVE_RANKS,
+        "schedule": SIM_SERVE_SCHEDULE,
+        "seed": SIM_SERVE_SEED,
+        "virtual_time": report["virtual_time"],
+        "requests": len(breakdowns),
+        "connected": connected,
+        "segment_sum_exact": sum(
+            1 for b in breakdowns if b["segment_sum"] == b["ttft"]),
+        "critical_path_le_wall": sum(
+            1 for b in breakdowns if b["critical_path"] <= b["wall"]),
+        "ttft_vt": agg["ttft"],
+        "segments_vt": agg["segments"],
+        "sync_ledger": ledger.summary(),
+    }
 
 
 def run_engines(n: int) -> dict:
@@ -55,6 +113,7 @@ def main() -> None:
 
     queue_bp = backpressure_scenario()
     engines = run_engines(n)
+    sim_serve = run_sim_serve()
 
     kv_bytes = 8 * 2 * 16 * 4.0
     occ_grid = [0.0, 0.25, 0.5, 0.75, 0.9]
@@ -78,6 +137,7 @@ def main() -> None:
         "devices": n,
         "queue_backpressure": queue_bp,
         "serve_engine": engines,
+        "sim_serve": sim_serve,
         "model": model,
     }
     with open("BENCH_serve_flow.json", "w") as f:
@@ -100,6 +160,14 @@ def main() -> None:
           f"{engines['credit']['msg_stats']['wire_msgs_per_step']} wire "
           f"transfers per append", flush=True)
 
+    segs = {k: v["p99"] for k, v in sim_serve["segments_vt"].items()}
+    emit("serve_sim_causal", 0.0,
+         f"requests={sim_serve['requests']};"
+         f"connected={sim_serve['connected']};"
+         f"ttft_p99_vt={sim_serve['ttft_vt']['p99']};"
+         f"sync_wait_vt={sim_serve['sync_ledger']['total_wait']};"
+         "seg_p99_vt=" + ",".join(f"{k}:{v:g}" for k, v in sorted(segs.items())))
+
     # the acceptance criteria, asserted where the evidence is produced
     assert engines["credit"]["retries"] == 0
     assert engines["retry"]["retries"] >= 1
@@ -107,6 +175,11 @@ def main() -> None:
     assert queue_bp["retry"]["retries"] >= queue_bp["retry"]["full_ring_steps"]
     assert (queue_bp["credit"]["wire_transfers_per_append"]
             == queue_bp["retry"]["wire_transfers_per_append"] == 2)
+    # §15: every traced request stitched, connected, and exactly attributed
+    assert sim_serve["requests"] > 0
+    assert sim_serve["connected"] == sim_serve["requests"]
+    assert sim_serve["segment_sum_exact"] == sim_serve["requests"]
+    assert sim_serve["critical_path_le_wall"] == sim_serve["requests"]
 
 
 if __name__ == "__main__":

@@ -162,6 +162,18 @@ def emit_trajectory(root: str, path: str = "BENCH_trajectory.json") -> dict:
                 for q in ("p50", "p99"):
                     if q in summ:
                         metrics[f"serve.{mode}.{hist}.{q}"] = summ[q]
+    # §15 causal slice: per-segment TTFT attribution in virtual ticks
+    # (deterministic, so these series are exact across commits)
+    ss = sf.get("sim_serve") or {}
+    for seg, summ in (ss.get("segments_vt") or {}).items():
+        for q in ("p50", "p99"):
+            if q in summ:
+                metrics[f"serve.sim.seg.{seg}.{q}_vt"] = summ[q]
+    if "ttft_vt" in ss:
+        for q in ("p50", "p99"):
+            metrics[f"serve.sim.ttft.{q}_vt"] = ss["ttft_vt"][q]
+    if "sync_ledger" in ss:
+        metrics["serve.sim.sync_wait_vt"] = ss["sync_ledger"]["total_wait"]
     if metrics:
         entry["metrics"] = metrics
     series.append(entry)

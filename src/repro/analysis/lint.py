@@ -21,6 +21,10 @@ discipline — the things ruff cannot know:
     epoch scope never complete.
   * **ANL005** — ``begin_plan`` in a function that never closes or
     flushes: the recorded ops would be dropped on the floor.
+  * **ANL006** — a ``serve.request.*`` trace event or span without a
+    ``rid=`` keyword: request-lifecycle events are the nodes of the §15
+    causal DAG, and one un-stamped site silently disconnects every request
+    that flows through it (the stitcher cannot know the event was theirs).
 
 Run as ``python -m repro.analysis.lint [paths...]`` (default:
 ``src/repro``); exits 1 on findings.  `check_source` is the testable API.
@@ -243,7 +247,26 @@ class _Linter(ast.NodeVisitor):
             self.flag(node, "ANL003",
                       "`apply_add` outside the fabric implementations "
                       "bypasses the OpCounter ledger")
+        self._check_request_event(node)
         self.generic_visit(node)
+
+    # ---------------------------------------------------------- ANL006
+    def _check_request_event(self, node: ast.Call) -> None:
+        name = _attr_name(node)
+        if name not in ("event", "span") or not node.args:
+            return
+        first = node.args[0]
+        if not (isinstance(first, ast.Constant) and
+                isinstance(first.value, str) and
+                first.value.startswith("serve.request.")):
+            return
+        # a literal rid= keyword, or a **kwargs splat that may carry it
+        if any(kw.arg == "rid" or kw.arg is None for kw in node.keywords):
+            return
+        self.flag(node, "ANL006",
+                  f"`{first.value}` without `rid=` — request-lifecycle "
+                  "events stitch the §15 causal DAG; an un-stamped event "
+                  "disconnects the request it belongs to")
 
 
 def check_source(src: str, path: str = "<string>") -> List[Finding]:

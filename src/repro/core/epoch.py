@@ -38,6 +38,7 @@ from typing import Any, ClassVar, Optional, Sequence
 import jax
 from jax import lax
 
+from repro.obs import causal as obs_causal
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import snapshot_delta
 
@@ -301,7 +302,10 @@ def flush(tree: Any, stats: Optional[SyncStats] = None) -> Any:
     """
     tr = obs_trace.TRACER
     if tr.enabled:
-        tr.event("sync.flush")
+        # rid attribution rides the causal scopes (request_scope /
+        # epoch_scope); wait=0 — the device path has no modeled latency
+        tr.event("sync.flush", rid=obs_causal.current_rid(), wait=0,
+                 rids=obs_causal.current_epoch_rids())
     SyncStats.record("flush_msgs", also=stats)
     return _barrier_all(tree)
 
@@ -310,7 +314,8 @@ def flush_local(tree: Any, stats: Optional[SyncStats] = None) -> Any:
     """MPI_Win_flush_local: local buffer reuse safety — same lowering."""
     tr = obs_trace.TRACER
     if tr.enabled:
-        tr.event("sync.flush_local")
+        tr.event("sync.flush_local", rid=obs_causal.current_rid(), wait=0,
+                 rids=obs_causal.current_epoch_rids())
     SyncStats.record("flush_local_msgs", also=stats)
     return _barrier_all(tree)
 

@@ -43,6 +43,7 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.obs import causal as obs_causal
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import snapshot_delta
 
@@ -146,16 +147,21 @@ class Fabric:
         if tr.enabled:
             tr.event("fabric.amo", rank=src, op=op, bank=bank, i=i)
 
-    def _account_fence(self) -> None:
+    def _account_fence(self, wait: int = 0) -> None:
         """Shared fence accounting: epoch advance + O(log p) barrier stages
-        (both fabrics MUST stay byte-identical here — the diff tests pin it)."""
+        (both fabrics MUST stay byte-identical here — the diff tests pin it).
+        `wait` is trace-only: the virtual time this fence blocked on
+        in-flight delivery (always 0 on the immediate LocalFabric), which
+        the sync-plane ledger (`obs.critpath.SyncLedger`) attributes to the
+        epoch and the requests riding it."""
         import math
 
         self.epoch += 1
         self.sync.barrier_stages += max(1, int(math.ceil(math.log2(max(self.p, 2)))))
         tr = obs_trace.TRACER
         if tr.enabled:
-            tr.event("fabric.fence", rank=-1, epoch=self.epoch)
+            tr.event("fabric.fence", rank=-1, epoch=self.epoch, wait=wait,
+                     rids=obs_causal.current_epoch_rids())
 
     # --------------------------------------------------------- inspection
     def snapshot(self) -> dict:
@@ -250,7 +256,8 @@ class LocalFabric(Fabric):
     def flush(self, src: int) -> None:
         tr = obs_trace.TRACER
         if tr.enabled:
-            tr.event("fabric.flush", rank=src)
+            tr.event("fabric.flush", rank=src, epoch=self.epoch, wait=0,
+                     rids=obs_causal.current_epoch_rids())
         SyncStats.record("flush_msgs", also=self.sync)
         if self.shadow is not None:
             self.shadow.sync("flush", src)
@@ -258,6 +265,10 @@ class LocalFabric(Fabric):
     def flush_remote(self, src: int) -> None:
         """MPI_Win_flush: locally everything is already remotely complete."""
         self.flush(src)
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("fabric.flush_remote", rank=src, epoch=self.epoch,
+                     wait=0, rids=obs_causal.current_epoch_rids())
         if self.shadow is not None:
             self.shadow.sync("flush_remote", src)
 

@@ -23,6 +23,7 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Iterator
 
+from repro.obs import flight as obs_flight
 from repro.obs import trace as obs_trace
 
 
@@ -159,12 +160,16 @@ class LockOrigin:
                      target=-1 if target is None else target,
                      wait_us=int(wait_s * 1e6), attempts=attempts)
         where = "" if target is None else str(target)
-        return LockTimeout(
+        err = LockTimeout(
             f"rank {self.rank}: {op}({where}) gave up after {attempts} "
             f"retries ({wait_s * 1e3:.2f} ms waiting) — "
             f"{_held_state(self.win, target)}",
             wait_s=wait_s, attempts=attempts,
         )
+        # likely deadlock: dump the flight-recorder ring (if one is
+        # installed) so the post-mortem has the acquisition interleaving
+        obs_flight.on_error(err, tag=op)
+        return err
 
     def _contended(self, op: str, target: int | None, t0: float,
                    attempts: int) -> None:

@@ -2,7 +2,9 @@
 
 Layering: `obs.trace` and `obs.metrics` sit *below* `repro.core` (they import
 nothing from it) so instrumented hot paths can reach the global tracer with a
-plain module-attribute lookup.  `obs.export` depends only on `obs.trace`;
+plain module-attribute lookup.  `obs.causal` sits beside them (contextvar
+scopes + DAG stitching, no upward imports); `obs.export` depends only on
+`obs.trace`; `obs.critpath` and `obs.flight` build on those (§15);
 `obs.drift` is the one module allowed to look upward (it reads
 `core.perfmodel` predictions) and is imported only by benchmarks and tests.
 """
@@ -14,3 +16,12 @@ from repro.obs.trace import (  # noqa: F401
     get_tracer,
     set_tracer,
 )
+from repro.obs.causal import (  # noqa: F401
+    build_dags,
+    current_epoch_rids,
+    current_rid,
+    edge,
+    epoch_scope,
+    request_scope,
+)
+from repro.obs.flight import FlightRecorder  # noqa: F401

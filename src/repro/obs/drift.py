@@ -47,6 +47,26 @@ WIRE_TRANSFERS_PER_FUSED_APPEND = 2
 # pages_per_block).  Structural, so gated at COUNT_TOL.
 FUSED_STAGING_PAGES = 2
 
+# §15 per-segment TTFT budgets, in VIRTUAL ticks, for the traced serve
+# conformance slice bench_serve_flow pins at (64 ranks, delay, seed 0).
+# Virtual time makes the measured p99s deterministic — the budgets sit at
+# ~2x the current values, so a protocol change that doubles a segment's
+# tail (an extra sync round, a serialized alloc) gates, while benign
+# reshuffles do not.  A budget of 0 means "this segment must stay empty at
+# p99 in this scenario" (credits are over-provisioned; queue_wait rides
+# prefill's milestone).
+SEGMENT_BUDGET_VT = {
+    "queue_wait": 0.0,
+    "credit_stall": 0.0,
+    "sync_wait": 0.0,
+    "page_alloc": 300.0,
+    "kv_wire": 320.0,
+    "prefill": 350.0,
+    "attend": 280.0,
+    "host": 0.0,
+}
+TTFT_BUDGET_VT = 600.0
+
 
 def _entry(bench: str, metric: str, predicted: float, observed: float,
            tol: float = COUNT_TOL, gate: bool = True) -> dict:
@@ -63,6 +83,26 @@ def _entry(bench: str, metric: str, predicted: float, observed: float,
         "tol": tol,
         "gate": gate,
         "ok": rel_err <= tol,
+    }
+
+
+def _budget_entry(bench: str, metric: str, budget: float,
+                  observed: float) -> dict:
+    """A one-sided gate: observed must stay AT OR UNDER the budget (latency
+    ceilings, unlike _entry's two-sided match).  rel_err is the overshoot
+    fraction, 0 when within budget."""
+    pred = float(budget)
+    obs = float(observed)
+    over = max(0.0, obs - pred) / max(abs(pred), 1.0)
+    return {
+        "bench": bench,
+        "metric": metric,
+        "predicted": pred,
+        "observed": obs,
+        "rel_err": over,
+        "tol": 0.0,
+        "gate": True,
+        "ok": obs <= pred,
     }
 
 
@@ -117,6 +157,31 @@ def _collect_serve_flow(doc: dict) -> list[dict]:
     if credit is not None:
         out.append(_entry("serve_flow", "engine.credit.retries", 0,
                           credit["retries"]))
+    out.extend(_collect_sim_serve(doc.get("sim_serve")))
+    return out
+
+
+def _collect_sim_serve(ss: Optional[dict]) -> list[dict]:
+    """§15 causal gates over the traced serve slice: stitching must be
+    complete and exact (COUNT_TOL — virtual time leaves no slack), and the
+    per-segment p99s must stay within their latency budgets."""
+    if not ss:
+        return []
+    n = ss.get("requests", 0)
+    out = [
+        _entry("sim_serve", "requests_connected", n, ss["connected"]),
+        _entry("sim_serve", "segment_sum_exact", n, ss["segment_sum_exact"]),
+        _entry("sim_serve", "critical_path_le_wall", n,
+               ss["critical_path_le_wall"]),
+        _budget_entry("sim_serve", "ttft.p99_vt", TTFT_BUDGET_VT,
+                      ss["ttft_vt"]["p99"]),
+    ]
+    segs = ss.get("segments_vt", {})
+    for seg, budget in SEGMENT_BUDGET_VT.items():
+        summ = segs.get(seg)
+        if summ is not None:
+            out.append(_budget_entry(
+                "sim_serve", f"seg.{seg}.p99_vt", budget, summ["p99"]))
     return out
 
 

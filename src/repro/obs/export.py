@@ -11,11 +11,21 @@ serializes with sorted keys and fixed separators, ranks are emitted in
 sorted order, and a virtual-clock trace contains no wall-time anywhere — so
 the same ``(seed, schedule)`` conformance run always produces the same
 bytes (tested in tests/test_obs.py).
+
+Truncation is never silent: a `max_events` cap (for multi-thousand-rank sim
+traces) keeps only the **newest** events and inserts a ``trace.truncated``
+metadata instant saying how many were cut, and a ring-buffer tracer
+(`obs.flight.FlightRecorder`) that already dropped events at record time
+surfaces its ``dropped`` count the same way.  `dump_chrome_trace` logs what
+was cut to stderr.  The marker rides `traceEvents` with ``ts`` equal to the
+oldest surviving event, so Perfetto shows *where* history begins.
 """
 
 from __future__ import annotations
 
+import gzip as _gzip
 import json
+import sys
 
 # tid for the scheduler/control track (rank -1): rendered after real ranks
 _CONTROL_TID = 1_000_000
@@ -25,17 +35,35 @@ def _tid(rank: int) -> int:
     return _CONTROL_TID if rank < 0 else rank
 
 
-def chrome_trace(tracer, process_name: str = "repro") -> dict:
-    """Build a Chrome trace event document from a Tracer's buffer."""
+def chrome_trace(tracer, process_name: str = "repro",
+                 max_events: int = 0) -> dict:
+    """Build a Chrome trace event document from a Tracer's buffer.
+
+    `max_events` > 0 keeps only the newest that many tracer events (plus
+    metadata); anything cut — by the cap here or earlier by a ring-buffer
+    tracer — is declared by a ``trace.truncated`` marker event.
+    """
+    recs = list(tracer.events)
+    cut = 0
+    if max_events and len(recs) > max_events:
+        cut = len(recs) - max_events
+        recs = recs[-max_events:]
+    dropped = cut + getattr(tracer, "dropped", 0)
+
     events: list[dict] = [
         {"ph": "M", "name": "process_name", "pid": 0, "tid": 0,
          "args": {"name": process_name}},
     ]
-    for rank in tracer.ranks():
+    for rank in sorted({ev["rank"] for ev in recs}):
         label = "control" if rank < 0 else f"rank {rank}"
         events.append({"ph": "M", "name": "thread_name", "pid": 0,
                        "tid": _tid(rank), "args": {"name": label}})
-    for ev in tracer.events:
+    if dropped:
+        events.append({"ph": "i", "name": "trace.truncated", "pid": 0,
+                       "tid": _CONTROL_TID, "s": "t",
+                       "ts": recs[0]["ts"] if recs else 0,
+                       "args": {"dropped": dropped, "kept": len(recs)}})
+    for ev in recs:
         rec = {
             "ph": ev["ph"],
             "name": ev["name"],
@@ -52,19 +80,42 @@ def chrome_trace(tracer, process_name: str = "repro") -> dict:
     return {
         "traceEvents": events,
         "displayTimeUnit": "ms",
-        "metadata": {"clock_domain": tracer.clock_domain},
+        "metadata": {"clock_domain": tracer.clock_domain,
+                     "dropped_events": dropped},
     }
 
 
-def dumps_chrome_trace(tracer, process_name: str = "repro") -> str:
+def dumps_chrome_trace(tracer, process_name: str = "repro",
+                       max_events: int = 0) -> str:
     """Canonical serialization — the unit of byte-identical replay."""
-    return json.dumps(chrome_trace(tracer, process_name),
+    return json.dumps(chrome_trace(tracer, process_name, max_events),
                       sort_keys=True, separators=(",", ":"))
 
 
-def dump_chrome_trace(tracer, path: str, process_name: str = "repro") -> str:
-    with open(path, "w") as f:
-        f.write(dumps_chrome_trace(tracer, process_name))
+def dump_chrome_trace(tracer, path: str, process_name: str = "repro",
+                      max_events: int = 0, gzipped: bool = False) -> str:
+    """Write the trace; ``gzipped=True`` writes ``<path>.gz`` (Perfetto
+    opens gzipped traces natively).  Logs any truncation to stderr."""
+    payload = dumps_chrome_trace(tracer, process_name, max_events)
+    dropped = getattr(tracer, "dropped", 0)
+    if max_events and len(tracer.events) > max_events:
+        dropped += len(tracer.events) - max_events
+    if dropped:
+        sys.stderr.write(
+            f"[obs.export] {path}: truncated — {dropped} oldest events cut "
+            f"(marked in-trace as trace.truncated)\n")
+    if gzipped:
+        if not path.endswith(".gz"):
+            path += ".gz"
+        # mtime=0 + no embedded filename: the .gz bytes stay a pure
+        # function of the payload, preserving the byte-identity contract
+        with open(path, "wb") as raw:
+            with _gzip.GzipFile(filename="", fileobj=raw, mode="wb",
+                                mtime=0) as f:
+                f.write(payload.encode("utf-8"))
+    else:
+        with open(path, "w") as f:
+            f.write(payload)
     return path
 
 

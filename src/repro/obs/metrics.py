@@ -33,11 +33,20 @@ def snapshot_delta(cur: dict, prev: Optional[dict]) -> dict:
     Keys present only in `cur` diff against 0; non-numeric leaves pass
     through unchanged.  This is the shared engine behind the ledgers'
     `delta(prev)` helpers (OpCounter, SyncStats, PlanStats, Fabric).
+
+    Histograms participate via `Histogram.snapshot()`'s append-only
+    ``{"__hist__": [...]}`` form: percentiles don't subtract, so the delta
+    of two histogram snapshots is the summary of the observations recorded
+    *between* them (the suffix `prev` hadn't seen yet).
     """
     prev = prev or {}
     out: dict = {}
     for k, v in cur.items():
-        if isinstance(v, dict):
+        if isinstance(v, dict) and "__hist__" in v:
+            p = prev.get(k)
+            seen = len(p["__hist__"]) if isinstance(p, dict) and "__hist__" in p else 0
+            out[k] = _summarize(v["__hist__"][seen:])
+        elif isinstance(v, dict):
             p = prev.get(k)
             out[k] = snapshot_delta(v, p if isinstance(p, dict) else {})
         elif isinstance(v, bool) or not isinstance(v, numbers.Number):
@@ -46,6 +55,30 @@ def snapshot_delta(cur: dict, prev: Optional[dict]) -> dict:
             p = prev.get(k, 0)
             out[k] = v - (p if isinstance(p, numbers.Number) else 0)
     return out
+
+
+def _percentile(xs: list, q: float) -> float:
+    """Exact q-th percentile (nearest-rank) of pre-sorted `xs`."""
+    if not xs:
+        return 0.0
+    rank = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[rank]
+
+
+def _summarize(values: list) -> dict:
+    if not values:
+        return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                "p50": 0.0, "p90": 0.0, "p99": 0.0}
+    xs = sorted(values)
+    return {
+        "count": len(xs),
+        "sum": sum(xs),
+        "min": xs[0],
+        "max": xs[-1],
+        "p50": _percentile(xs, 50),
+        "p90": _percentile(xs, 90),
+        "p99": _percentile(xs, 99),
+    }
 
 
 def _label_key(labels: dict) -> tuple:
@@ -79,43 +112,48 @@ class Gauge:
 
 
 class Histogram:
-    """Value-retaining histogram with exact percentiles.
+    """Value-retaining histogram with exact percentiles and exemplars.
 
     Runs are small (thousands of observations, not millions), so we keep the
     raw values and compute exact order statistics — no bucket-boundary error
     in the TTFT/TBT numbers the trajectory tracks per commit.
+
+    An observation may carry an **exemplar** — an opaque sample reference,
+    by convention a request id — so a percentile is not just a number but a
+    pointer: ``p99_exemplar`` in the summary names a concrete request whose
+    causal DAG (`obs.causal.build_dags`) explains that tail.
     """
 
-    __slots__ = ("values",)
+    __slots__ = ("values", "exemplars")
 
     def __init__(self):
         self.values: list[float] = []
+        self.exemplars: dict[float, object] = {}  # value -> latest exemplar
 
-    def observe(self, v: float) -> None:
-        self.values.append(float(v))
+    def observe(self, v: float, exemplar=None) -> None:
+        v = float(v)
+        self.values.append(v)
+        if exemplar is not None:
+            self.exemplars[v] = exemplar
 
     def percentile(self, q: float) -> float:
         """Exact q-th percentile (nearest-rank), q in [0, 100]."""
-        if not self.values:
-            return 0.0
-        xs = sorted(self.values)
-        rank = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
-        return xs[rank]
+        return _percentile(sorted(self.values), q)
 
     def summary(self) -> dict:
-        if not self.values:
-            return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
-                    "p50": 0.0, "p90": 0.0, "p99": 0.0}
-        xs = sorted(self.values)
-        return {
-            "count": len(xs),
-            "sum": sum(xs),
-            "min": xs[0],
-            "max": xs[-1],
-            "p50": self.percentile(50),
-            "p90": self.percentile(90),
-            "p99": self.percentile(99),
-        }
+        out = _summarize(self.values)
+        if self.exemplars:
+            # the exemplar of the observation sitting at the p99 rank (the
+            # request to go look at); absent entirely when none were given,
+            # so exemplar-free summaries keep their exact prior shape
+            ex = self.exemplars.get(out["p99"])
+            if ex is not None:
+                out["p99_exemplar"] = ex
+        return out
+
+    def snapshot(self) -> dict:
+        """Append-only snapshot form understood by `snapshot_delta`."""
+        return {"__hist__": list(self.values)}
 
 
 class MetricsRegistry:

@@ -28,12 +28,33 @@ interval contains its children's, and Perfetto reconstructs the stack from
 interval containment on each track.  `Span.set(**attrs)` adds attributes
 discovered mid-flight (e.g. a plan flush learns its raw→coalesced counts
 only after grouping).
+
+**The disabled-span contract.**  `NullTracer.span` returns one shared
+`NULL_SPAN` singleton whose `.set(**attrs)` discards everything — including
+attrs computed inside nested spans.  That discard is the *point*: it is
+what makes ``with TRACER.span(...) as sp: ... sp.set(x=cost())`` free when
+tracing is off, but it also means code MUST NOT use span attrs as a data
+channel back to the caller (they vanish under the null tracer) and MUST
+NOT compute expensive values eagerly in `.set()` arguments on hot paths —
+guard with ``if tr.enabled:`` first.  `tests/test_obs.py` pins the
+disabled-path cost to roughly one attribute load.
+
+**Reserved attrs.**  ``edge`` and ``cause`` (see `obs.causal`) are causal
+stitching links and are only valid on instant *events* — a link fires at a
+point in time, whereas a span covers an interval and its `set()` calls can
+land at any moment inside it.  `Tracer.span` raises ``ValueError`` on
+them so a stitching bug fails loudly at the producer, not as a silently
+disconnected DAG at analysis time.
 """
 
 from __future__ import annotations
 
 import threading
 import time
+
+# Causal-link keys (obs.causal.RESERVED_SPAN_ATTRS mirrors this; duplicated
+# literally here so the hot tracer module never imports the causal layer).
+_RESERVED_SPAN_ATTRS = frozenset({"edge", "cause"})
 
 
 class _NullSpan:
@@ -167,27 +188,44 @@ class Tracer:
         return (time.perf_counter_ns() - self._wall0) // 1000
 
     # ------------------------------------------------------------- recording
-    def event(self, name: str, rank: int = 0, **attrs) -> None:
-        """Record an instant event on `rank`'s track."""
-        rec = {"ph": "i", "name": name, "ts": self.now(), "rank": int(rank), "args": attrs}
+    def _record(self, rec: dict) -> None:
+        """Single funnel every finished record passes through.
+
+        Subclasses override this to change retention policy — e.g. the
+        flight recorder's bounded ring (`obs.flight.FlightRecorder`) —
+        without touching the event/span call sites.
+        """
         with self._mu:
             self.events.append(rec)
 
+    def event(self, name: str, rank: int = 0, **attrs) -> None:
+        """Record an instant event on `rank`'s track."""
+        self._record({"ph": "i", "name": name, "ts": self.now(),
+                      "rank": int(rank), "args": attrs})
+
     def span(self, name: str, rank: int = 0, **attrs) -> Span:
-        """Open a span on `rank`'s track; close it with the `with` block."""
+        """Open a span on `rank`'s track; close it with the `with` block.
+
+        Rejects the reserved causal-link attrs (``edge``/``cause``): links
+        belong on instant events, where they fire at a defined point in
+        time — see the module docstring and `obs.causal`.
+        """
+        bad = _RESERVED_SPAN_ATTRS.intersection(attrs)
+        if bad:
+            raise ValueError(
+                f"span {name!r}: reserved causal attrs {sorted(bad)} are only "
+                f"valid on instant events (tracer.event); see obs.causal")
         return Span(self, name, int(rank), attrs)
 
     def _finish(self, sp: Span) -> None:
-        rec = {
+        self._record({
             "ph": "X",
             "name": sp.name,
             "ts": sp.t0,
             "dur": self.now() - sp.t0,
             "rank": sp.rank,
             "args": sp.attrs,
-        }
-        with self._mu:
-            self.events.append(rec)
+        })
 
     # ------------------------------------------------------------- inspection
     def ranks(self) -> list[int]:

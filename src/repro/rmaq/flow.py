@@ -57,6 +57,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.obs import causal as obs_causal
 from repro.obs import trace as obs_trace
 
 from . import channel as rch
@@ -324,7 +325,12 @@ class HostFlowChannel:
 
     def __init__(self, p: int, capacity: int, lanes: Sequence[rch.Lane],
                  n_producers: Optional[int] = None, fabric=None,
-                 name: str = "q"):
+                 name: str = "q", causal_tags: bool = False):
+        # causal_tags: declares that message tags ARE request ids (the serve
+        # path's convention) — send/recv then stamp causal edge/cause links
+        # so traces stitch into cross-rank request DAGs (obs.causal).  Off
+        # by default: generic channels carry arbitrary tags.
+        self.causal_tags = causal_tags
         self.ch = rch.HostChannel(p, capacity, lanes, fabric=fabric, name=name)
         self.fabric = self.ch.group.fabric
         self._granted_region = f"{name}.granted"
@@ -366,12 +372,24 @@ class HostFlowChannel:
             if self.available(src, dest, lane) == 0:
                 self.deferred += 1
                 if tr.enabled:
-                    tr.event("flow.send", rank=src, dest=dest, lane=lane,
-                             outcome="deferred")
+                    if self.causal_tags:
+                        tr.event("flow.send", rank=src, dest=dest, lane=lane,
+                                 outcome="deferred", rid=int(tag),
+                                 seg="credit_stall")
+                    else:
+                        tr.event("flow.send", rank=src, dest=dest, lane=lane,
+                                 outcome="deferred")
                 return False
         if tr.enabled:
-            tr.event("flow.send", rank=src, dest=dest, lane=lane,
-                     outcome="credited")
+            if self.causal_tags:
+                # producer end of the message's causal edge; the matching
+                # cause lands on the consumer's flow.deliver at recv
+                tr.event("flow.send", rank=src, dest=dest, lane=lane,
+                         outcome="credited", rid=int(tag),
+                         edge=obs_causal.edge(int(tag), f"flow{src}-{dest}"))
+            else:
+                tr.event("flow.send", rank=src, dest=dest, lane=lane,
+                         outcome="credited")
         self.ch.send(src, name, payload, tag, dest)
         self.sent[src, dest, lane] += 1
         return True
@@ -386,6 +404,12 @@ class HostFlowChannel:
         tr = obs_trace.TRACER
         if tr.enabled:
             tr.event("flow.recv", rank=rank, n=len(msgs))
+            if self.causal_tags:
+                for m in msgs:
+                    tr.event("flow.deliver", rank=rank, rid=int(m["tag"]),
+                             src=int(m["src"]),
+                             cause=obs_causal.edge(
+                                 int(m["tag"]), f"flow{int(m['src'])}-{rank}"))
         for m in msgs:
             self.granted[rank, m["src"], self.ch._lane_id(m["lane"])] += 1
         return msgs

@@ -53,6 +53,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import plan as plan_mod
 from repro.core import window as window_mod
+from repro.obs import causal as obs_causal
 from repro.obs import trace as obs_trace
 
 Array = jax.Array
@@ -395,7 +396,8 @@ class HostQueueGroup:
         if not tr.enabled:
             return self._step_impl(sends)
         with tr.span("queue.step", rank=-1, queue=self._name,
-                     producers=len(sends)) as sp:
+                     producers=len(sends), epoch=self.fabric.epoch,
+                     rids=obs_causal.current_epoch_rids()) as sp:
             accepted = self._step_impl(sends)
             flat = [ok for flags in accepted.values() for ok in flags]
             sp.set(accepted=sum(flat), rejected=len(flat) - sum(flat))
@@ -442,7 +444,8 @@ class HostQueueGroup:
         n = avail if max_n is None else min(avail, max_n)
         tr = obs_trace.TRACER
         if tr.enabled:
-            tr.event("queue.drain", rank=rank, queue=self._name, n=n)
+            tr.event("queue.drain", rank=rank, queue=self._name, n=n,
+                     epoch=self.fabric.epoch)
         out = []
         for i in range(n):
             slot = int(self.ctrs[rank, HEAD] + np.uint64(i)) & (self.capacity - 1)

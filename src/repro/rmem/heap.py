@@ -52,6 +52,8 @@ from repro import compat
 from repro.core import plan as plan_mod
 from repro.core import window as window_mod
 from repro.core.locks_sim import _AtomicWord
+from repro.obs import causal as obs_causal
+from repro.obs import flight as obs_flight
 from repro.obs import trace as obs_trace
 from repro.rmaq.queue import admission_plan
 
@@ -571,8 +573,11 @@ class HostPagePool:
                 self.allocs += 1
                 tr = obs_trace.TRACER
                 if tr.enabled:
+                    # rid from the ambient request scope: page traffic joins
+                    # the request's causal DAG without a signature change
                     tr.event("heap.alloc", rank=origin, pool=self.name,
-                             page=idx, gen=int(self.gen[idx]))
+                             page=idx, gen=int(self.gen[idx]),
+                             rid=obs_causal.current_rid())
                 return idx
 
     def free(self, idx: int, origin: int = 0) -> None:
@@ -581,7 +586,9 @@ class HostPagePool:
         if not 0 <= idx < self.n_pages:
             raise HeapError(f"free of page {idx} outside pool")
         if fab.read_word(origin, self._bank_ref, idx) != 0:
-            raise HeapError(f"free of live page {idx} (refcount > 0)")
+            err = HeapError(f"free of live page {idx} (refcount > 0)")
+            obs_flight.on_error(err, tag=self.name)
+            raise err
         self.gen[idx] += np.uint32(1)                     # free bump
         while True:
             old = fab.read_word(origin, self._bank_head, 0)
@@ -596,7 +603,8 @@ class HostPagePool:
                 tr = obs_trace.TRACER
                 if tr.enabled:
                     tr.event("heap.free", rank=origin, pool=self.name,
-                             page=idx, gen=int(self.gen[idx]))
+                             page=idx, gen=int(self.gen[idx]),
+                             rid=obs_causal.current_rid())
                 return
 
     # -------------------------------------------------------------- refcount
@@ -607,7 +615,9 @@ class HostPagePool:
         old = fab.fetch_add(origin, self._bank_ref, idx, delta)
         if delta > 0 and old == 0:
             fab.fetch_add(origin, self._bank_ref, idx, -delta)
-            raise HeapError(f"ref_add on dead page {idx} (ABA hazard)")
+            err = HeapError(f"ref_add on dead page {idx} (ABA hazard)")
+            obs_flight.on_error(err, tag=self.name)
+            raise err
         return old
 
     def release(self, idx: int, origin: int = 0) -> bool:
@@ -616,7 +626,9 @@ class HostPagePool:
         old = fab.fetch_add(origin, self._bank_ref, idx, -1)
         if old <= 0:
             fab.fetch_add(origin, self._bank_ref, idx, 1)
-            raise HeapError(f"release of dead page {idx} (double free)")
+            err = HeapError(f"release of dead page {idx} (double free)")
+            obs_flight.on_error(err, tag=self.name)
+            raise err
         if old == 1:
             self.free(idx, origin=origin)
             return True

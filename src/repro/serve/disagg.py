@@ -67,6 +67,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.kernels.common import interpret_mode
 from repro.kernels.paged_attention import kernel as pattn
+from repro.obs import causal as obs_causal
+from repro.obs import flight as obs_flight
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry
 from repro.rmaq import channel as rch
@@ -245,6 +247,8 @@ class DisaggEngine:
         # inter-result gap is the decode cadence, not a per-lane stream)
         self.metrics = MetricsRegistry()
         self._t_submit: dict[int, float] = {}
+        self._t_staged: dict[int, float] = {}   # rid -> staging wall time
+        self._stalled: set[int] = set()         # rids that hit a stall while queued
         self._t_last_result: float | None = None
 
     # ----------------------------------------------------------- device step
@@ -497,18 +501,28 @@ class DisaggEngine:
             tr.event("serve.request.submit", rid=int(req_id),
                      plen=int(toks.shape[0]))
 
-    def _observe_result(self, rid: int) -> None:
+    def _observe_result(self, rid: int, rank: int = 0) -> None:
         """Land one decoded result in the latency ledgers: per-request TTFT
-        and the engine-wide inter-result gap (TBT)."""
+        and the engine-wide inter-result gap (TBT).  `rank` is the decode
+        rank that produced the token — the consumer end of the request's
+        KV edge, which closes the cross-rank causal DAG (obs.causal)."""
         now = time.perf_counter()
         t0 = self._t_submit.pop(rid, None)
         if t0 is not None:
             ttft_us = (now - t0) * 1e6
-            self.metrics.histogram("serve.ttft_us").observe(ttft_us)
+            self.metrics.histogram("serve.ttft_us").observe(ttft_us,
+                                                            exemplar=rid)
+            t_staged = self._t_staged.pop(rid, None)
+            if t_staged is not None:
+                self.metrics.histogram("seg.kv_wire_us").observe(
+                    (now - t_staged) * 1e6)
+            self._stalled.discard(rid)
             tr = obs_trace.TRACER
             if tr.enabled:
-                tr.event("serve.request.first_token", rid=rid,
-                         ttft_us=int(ttft_us))
+                tr.event("serve.request.decode", rid=rid, rank=rank,
+                         cause=obs_causal.edge(rid, "kv"), seg="kv_wire")
+                tr.event("serve.request.first_token", rid=rid, rank=rank,
+                         seg="attend", ttft_us=int(ttft_us))
         if self._t_last_result is not None:
             self.metrics.histogram("serve.tbt_us").observe(
                 (now - self._t_last_result) * 1e6)
@@ -522,6 +536,10 @@ class DisaggEngine:
             "ttft_us": self.metrics.histogram("serve.ttft_us").summary(),
             "tbt_us": self.metrics.histogram("serve.tbt_us").summary(),
             "attend_us": self.metrics.histogram("serve.attend_us").summary(),
+            "seg.queue_wait_us":
+                self.metrics.histogram("seg.queue_wait_us").summary(),
+            "seg.kv_wire_us":
+                self.metrics.histogram("seg.kv_wire_us").summary(),
         }
 
     def _host_credits(self) -> np.ndarray:
@@ -605,10 +623,27 @@ class DisaggEngine:
                 job = self._map_request(rid, toks)
                 if job is None:
                     self._pending.insert(0, (rid, toks))   # pool dry: wait
+                    self._stalled.add(int(rid))
+                    tr = obs_trace.TRACER
+                    if tr.enabled:
+                        tr.event("serve.request.pool_stall", rank=r,
+                                 rid=int(rid), seg="queue_wait")
                     pool_dry = True
                     continue
                 self._jobs[rid] = job
                 self._rank_job[r] = rid
+                now = time.perf_counter()
+                self._t_staged[int(rid)] = now
+                self.metrics.histogram("seg.queue_wait_us").observe(
+                    (now - self._t_submit.get(int(rid), now)) * 1e6)
+                tr = obs_trace.TRACER
+                if tr.enabled:
+                    # time since submit was queue wait, unless the request
+                    # sat out a dry pool — then it waited on page releases
+                    tr.event("serve.request.page_alloc", rank=r,
+                             rid=int(rid), pages=len(job["entries"]),
+                             seg=("page_alloc" if int(rid) in self._stalled
+                                  else "queue_wait"))
             if self._rank_job[r] is None:
                 continue
             job = self._jobs[self._rank_job[r]]
@@ -641,6 +676,11 @@ class DisaggEngine:
             sel = self._select_lane(budget, r, targets=(t,))
             if sel is None:
                 self.credit_stalls += 1
+                self._stalled.add(int(job["rid"]))
+                tr = obs_trace.TRACER
+                if tr.enabled:
+                    tr.event("serve.request.credit_stall", rank=r,
+                             rid=int(job["rid"]), seg="host")
                 continue
             _, ln = sel
             ptab[r] = self.kv.table_entries(job["rid"])
@@ -649,6 +689,15 @@ class DisaggEngine:
             self.lane_sends[t, ln] += 1
             self.appends += 1
             appended[r] = job["rid"]
+            tr = obs_trace.TRACER
+            if tr.enabled:
+                # the append (page-table message) is what wakes the decoder:
+                # it carries the request's KV edge in paged mode
+                tr.event("serve.request.append", rank=r, rid=int(job["rid"]),
+                         dst=int(t), lane=int(ln),
+                         seg=("credit_stall" if int(job["rid"]) in self._stalled
+                              else "host"),
+                         edge=obs_causal.edge(int(job["rid"]), "kv"))
 
         (self.qstate, self.fstate, self.pool, entries, mask, tags, sent_ok,
          rejected) = self._step(
@@ -686,7 +735,7 @@ class DisaggEngine:
             for rid, tok in zip(out_req[rr], out_tok[rr]):
                 if rid >= 0:
                     self.results[int(rid)] = int(tok)
-                    self._observe_result(int(rid))
+                    self._observe_result(int(rid), rank=rr)
                     for ref in self.kv.table_release(int(rid)):
                         self._page_ready.discard((ref.owner, ref.page_id))
                     emitted += 1
@@ -713,6 +762,14 @@ class DisaggEngine:
                 sel = self._select_lane(budget, r)
                 if sel is None:
                     self.credit_stalls += 1
+                    rid_wait = int(self._pending[0][0])
+                    self._stalled.add(rid_wait)
+                    tr = obs_trace.TRACER
+                    if tr.enabled:
+                        # milestone: time up to this stall was pure queue
+                        # wait; the eventual staging charges credit_stall
+                        tr.event("serve.request.credit_stall", rank=r,
+                                 rid=rid_wait, seg="queue_wait")
                     continue               # r idles this step; request waits
                 t, ln = sel
                 rid, toks = self._pending.pop(0)
@@ -720,11 +777,20 @@ class DisaggEngine:
                 staged[r] = (rid, toks)
                 budget[r, t, ln] -= 1
                 self.lane_sends[t, ln] += 1
+                now = time.perf_counter()
+                self._t_staged[int(rid)] = now
+                self.metrics.histogram("seg.queue_wait_us").observe(
+                    (now - self._t_submit.get(int(rid), now)) * 1e6)
                 tr = obs_trace.TRACER
                 if tr.enabled:
+                    # the producer end of the request's KV edge: the decode
+                    # side stamps cause=edge(rid, "kv") when the token lands
                     tr.event("serve.request.kv_transfer", rank=r, rid=int(rid),
                              dst=int(t), lane=int(ln),
-                             nbytes=cfg.block_nbytes)
+                             nbytes=cfg.block_nbytes,
+                             seg=("credit_stall" if int(rid) in self._stalled
+                                  else "queue_wait"),
+                             edge=obs_causal.edge(int(rid), "kv"))
         else:
             # legacy: round-robin by request id, single implicit lane
             for r in range(cfg.n_prefill):
@@ -770,7 +836,7 @@ class DisaggEngine:
             for rid, tok in zip(out_req[r], out_tok[r]):
                 if rid >= 0:
                     self.results[int(rid)] = int(tok)
-                    self._observe_result(int(rid))
+                    self._observe_result(int(rid), rank=r)
                     emitted += 1
         return emitted
 
@@ -783,9 +849,11 @@ class DisaggEngine:
         while len(self.results) < self._n_submitted:
             if steps >= max_steps:
                 undrained = sorted(self._submitted_ids - set(self.results))
-                raise DrainError(
+                err = DrainError(
                     f"not drained after {max_steps} steps", tuple(undrained)
                 )
+                obs_flight.on_error(err, tag="disagg")
+                raise err
             self.step()
             steps += 1
         return self.results

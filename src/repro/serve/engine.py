@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core.locks_sim import WRITER_BIT, LockOrigin, LockWindow
 from repro.models.registry import Model
+from repro.obs import flight as obs_flight
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry
 
@@ -189,6 +190,16 @@ class ServeEngine:
             if claim is None:
                 return admitted
             req, slot = claim
+            t_admit = time.perf_counter()
+            self.metrics.histogram("seg.queue_wait_us").observe(
+                (t_admit - req.t_submit) * 1e6)
+            tr = obs_trace.TRACER
+            if tr.enabled:
+                # seg milestones cut the TTFT interval (obs.critpath): the
+                # time since the previous milestone — here, since submit —
+                # is charged to the named segment
+                tr.event("serve.request.admit", rid=req.rid, slot=slot,
+                         seg="queue_wait")
             with self.lock.shared(0):
                 plen = len(req.prompt)
                 tokens = jnp.zeros((self.max_seq,), jnp.int32).at[:plen].set(
@@ -203,16 +214,20 @@ class ServeEngine:
                 self.slot_last[slot] = first
                 req.output.append(first)   # the prefill already produced token 1
                 now = time.perf_counter()
+                # exemplar=rid: the p99 summary names a concrete request
+                # whose causal DAG explains the tail (obs.metrics)
                 self.metrics.histogram("serve.ttft_us").observe(
-                    (now - req.t_submit) * 1e6
+                    (now - req.t_submit) * 1e6, exemplar=req.rid
                 )
+                self.metrics.histogram("seg.prefill_us").observe(
+                    (now - t_admit) * 1e6)
                 self._slot_t_last[slot] = now
                 tr = obs_trace.TRACER
                 if tr.enabled:
                     tr.event("serve.request.prefill", rid=req.rid, slot=slot,
-                             plen=plen)
+                             plen=plen, seg="prefill")
                     tr.event("serve.request.first_token", rid=req.rid,
-                             slot=slot,
+                             slot=slot, seg="host",
                              ttft_us=int((now - req.t_submit) * 1e6))
                 if len(req.output) < req.max_new:
                     # decode may pick the lane up now; an instantly-finished
@@ -265,10 +280,15 @@ class ServeEngine:
         return emitted
 
     def serve_metrics(self) -> dict:
-        """Request-latency summaries (§12): TTFT and TBT in microseconds."""
+        """Request-latency summaries (§12): TTFT and TBT in microseconds,
+        plus the per-segment TTFT decomposition (§15)."""
         return {
             "ttft_us": self.metrics.histogram("serve.ttft_us").summary(),
             "tbt_us": self.metrics.histogram("serve.tbt_us").summary(),
+            "seg.queue_wait_us":
+                self.metrics.histogram("seg.queue_wait_us").summary(),
+            "seg.prefill_us":
+                self.metrics.histogram("seg.prefill_us").summary(),
         }
 
     def schedule(self) -> ScheduleTick:
@@ -293,9 +313,11 @@ class ServeEngine:
         steps = 0
         while not self.queue.empty() or any(not f for f in self.slot_free):
             if steps >= max_steps:
-                raise DrainError(
+                err = DrainError(
                     f"not drained after {max_steps} steps", self._undrained_rids()
                 )
+                obs_flight.on_error(err, tag="serve")
+                raise err
             self.schedule()
             steps += 1
         return steps

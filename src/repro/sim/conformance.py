@@ -21,6 +21,12 @@ simulated step**:
     on a read-modify-write split across an interleaving window.
   * kv:     paged-KV prefix sharing + `ft.elastic.kv_membership_change`
     (rank leave/join mid-run) preserve pool conservation throughout.
+  * serve:  an end-to-end disaggregated serving round (submit → prefill →
+    KV page alloc → credited flow send → decode → first token) under full
+    causal tracing (§15): every completed request's trace must stitch into
+    one *connected* cross-rank DAG whose critical-path segment sum equals
+    its measured TTFT exactly (virtual time), with every credited send
+    admitted (rejected == 0) and every KV page returned.
 
 Every run is a pure function of its ``(seed, schedule)`` pair; a violation
 raises `ConformanceError` carrying the exact repro command line.  The
@@ -34,6 +40,7 @@ CLI::
         --schedules reorder,delay,duplicate --protocols queue,flow,heap
     python -m repro.sim.conformance --smoke        # 64-rank 3-seed subset
     python -m repro.sim.conformance --schedules tear --expect-fail
+    python -m repro.sim.conformance --flight --trace-dir sim-traces
 """
 
 from __future__ import annotations
@@ -50,6 +57,9 @@ import numpy as np
 
 from repro.core.locks_sim import (GLOBAL_EXCL_UNIT, GLOBAL_SHRD_MASK,
                                   WRITER_BIT, _AtomicWord)
+from repro.obs import causal as obs_causal
+from repro.obs import critpath as obs_critpath
+from repro.obs import flight as obs_flight
 from repro.obs import trace as obs_trace
 from repro.obs.export import dump_chrome_trace
 from repro.ft.elastic import kv_membership_change
@@ -640,6 +650,201 @@ def run_kv(spec: RunSpec, rounds: int = 4, n_pages: int = 8) -> dict:
 
 
 # ======================================================================
+# serve: end-to-end disaggregated request path under causal tracing (§15)
+# ======================================================================
+def run_serve(spec: RunSpec, reqs: int = 3, n_pages: int = 2) -> dict:
+    """The serve path's causal contract, run as a conformance protocol.
+
+    Prefill rank i pairs with decode rank ``n_pairs + i``.  Every request
+    walks submit → prefill → KV page alloc (remote free-list, under
+    `request_scope`) → credited flow send (tag IS the rid,
+    ``causal_tags=True``) → chaos-delayed delivery → decode → attend →
+    first token, each milestone stamped with the §15 segment it *ends*.
+    The driver flushes/fences under `epoch_scope` of the in-flight rids so
+    the sync-plane ledger can attribute fence waits to requests.
+
+    At quiescence the collected trace is re-stitched (`obs.causal`) and the
+    causal invariants asserted per completed request: the DAG is connected
+    across ranks, the segment sum equals TTFT exactly (virtual time), and
+    the critical path never exceeds the wall span.  A `Tracer` is installed
+    for the run when none is active — the protocol cannot check causality
+    untraced.
+    """
+    p = spec.n_ranks
+    if p < 2:
+        raise ConformanceError(spec, 0, "serve needs >= 2 ranks")
+    n_pairs = max(1, p // 4)
+    # one ring per rank; credits statically split across the prefill ranks
+    capacity = 1 << max(3, (2 * n_pairs - 1).bit_length())
+
+    own = obs_trace.Tracer() if not obs_trace.TRACER.enabled else None
+    prev = obs_trace.set_tracer(own) if own is not None else None
+    try:
+
+        def checker(kind, who, sched):
+            # credit admission makes ring-full impossible on the serve path
+            if hfc.rejected:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"{hfc.rejected} credited KV sends rejected at the ring")
+
+        fab, sched = _harness(spec, checker)
+        tracer = obs_trace.TRACER                       # attached to the clock
+        hfc = HostFlowChannel(p, capacity, [Lane("kv", (1,), "float32")],
+                              n_producers=n_pairs, fabric=fab, name="servq",
+                              causal_tags=True)
+        pools = {n_pairs + i: heap.HostPagePool(
+                     n_pages, fabric=fab, name=f"kvpool{i}", owner=n_pairs + i)
+                 for i in range(n_pairs)}
+        rid_ctr = itertools.count(1)
+        inflight: dict[int, tuple[int, int]] = {}       # rid -> (decode, page)
+        done_by = collections.Counter()                 # decode rank -> finished
+        state = {"submitted": 0, "completed": 0, "credit_stalls": 0,
+                 "pool_stalls": 0}
+        n_total = n_pairs * reqs
+
+        def prefill(i: int):
+            r, t = i, n_pairs + i
+            rng = _rng(spec.seed, 53 * i + 23)
+            tr = obs_trace.TRACER
+            for _ in range(reqs):
+                rid = next(rid_ctr)
+                tr.event("serve.request.submit", rank=r, rid=rid)
+                for _ in range(rng.randint(1, 2)):      # prefill compute
+                    yield
+                tr.event("serve.request.prefill", rank=r, rid=rid,
+                         seg="prefill")
+                # KV pages live on the decode side; alloc is the remote
+                # CAS free-list pop, attributed to this request
+                with obs_causal.request_scope(rid):
+                    pid = pools[t].alloc(origin=r)
+                while pid is None:                      # pool dry: pages
+                    state["pool_stalls"] += 1           # return at decode
+                    yield
+                    with obs_causal.request_scope(rid):
+                        pid = pools[t].alloc(origin=r)
+                tr.event("serve.request.page_alloc", rank=r, rid=rid,
+                         page=pid, seg="page_alloc")
+                # tag IS the rid: the channel stamps the producer edge and
+                # the consumer cause (flow.deliver) for cross-rank stitching
+                while not hfc.send(r, "kv", np.float32([rid]), rid, t):
+                    state["credit_stalls"] += 1
+                    yield
+                inflight[rid] = (t, pid)
+                state["submitted"] += 1
+                yield
+
+        def decoder(i: int):
+            t = n_pairs + i
+            tr = obs_trace.TRACER
+            while done_by[t] < reqs:
+                try:                                    # emits flow.deliver
+                    msgs = hfc.recv(t, 4)
+                except (ValueError, IndexError) as e:
+                    # a torn transfer (notification without payload — the
+                    # Quo-Vadis-RMA divergence class) surfaces as a
+                    # malformed ring row; detect it, don't crash on it
+                    raise ConformanceError(
+                        spec, sched.events,
+                        f"decode rank {t}: malformed delivery "
+                        f"(payload decoupled from notification): {e}")
+                for m in msgs:
+                    rid = int(m["tag"])
+                    if rid not in inflight or \
+                            int(np.asarray(m["payload"]).ravel()[0]) != rid:
+                        raise ConformanceError(
+                            spec, sched.events,
+                            f"decode rank {t}: KV payload for request {rid} "
+                            "torn or unknown (notification decoupled from "
+                            "payload)")
+                    tr.event("serve.request.decode", rank=t, rid=rid,
+                             cause=obs_causal.edge(
+                                 rid, f"flow{int(m['src'])}-{t}"),
+                             seg="kv_wire")
+                    tr.event("serve.decode.attend", rank=t, rid=rid)
+                    yield                               # attend compute
+                    tr.event("serve.request.first_token", rank=t, rid=rid,
+                             seg="attend")
+                    _, pid = inflight.pop(rid)
+                    with obs_causal.request_scope(rid):
+                        pools[t].release(pid, origin=t)
+                    done_by[t] += 1
+                    state["completed"] += 1
+                yield
+
+        def driver():
+            rounds = 0
+            while state["completed"] < n_total:
+                # the epoch's fence waits are paid by the staged requests;
+                # fencing only every other round leaves the chaos schedule
+                # room to reorder/delay deliveries in between
+                with obs_causal.epoch_scope(sorted(inflight)):
+                    hfc.flush()
+                    if rounds % 2:
+                        fab.fence()
+                rounds += 1
+                yield
+
+        for i in range(n_pairs):
+            sched.spawn(f"pre{i:04d}", prefill(i))
+            sched.spawn(f"dec{i:04d}", decoder(i))
+        sched.spawn("driver", driver())
+        report = sched.run()
+
+        # ---- causal invariants: re-stitch the trace and check every request
+        events = list(tracer.events)
+        dags = obs_causal.build_dags(events)
+        ring_dropped = getattr(tracer, "dropped", 0)
+        breakdowns = []
+        for rid in range(1, n_total + 1):
+            dag = dags.get(rid)
+            if dag is None or dag.find("serve.request.submit") is None \
+                    or dag.find("serve.request.first_token") is None:
+                if ring_dropped:                        # flight ring shed the
+                    continue                            # request's head: skip
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"request {rid}: trace missing or incomplete "
+                    f"({'absent' if dag is None else 'no submit/first_token'})")
+            if not dag.connected():
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"request {rid}: causal DAG disconnected across ranks "
+                    f"{sorted(dag.ranks())} ({len(dag.events)} events, "
+                    f"{len(dag.edges)} edges)")
+            bd = obs_critpath.ttft_breakdown(dag)
+            if bd["segment_sum"] != bd["ttft"]:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"request {rid}: segment sum {bd['segment_sum']} != "
+                    f"TTFT {bd['ttft']} (virtual time must be exact): "
+                    f"{bd['segments']}")
+            cp, _ = obs_critpath.critical_path(dag)
+            if cp > dag.wall():
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"request {rid}: critical path {cp} exceeds wall "
+                    f"{dag.wall()}")
+            breakdowns.append(bd)
+        for t, pool in pools.items():
+            if pool.live_count() != 0:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"decode rank {t}: {pool.live_count()} KV pages leaked")
+
+        ledger = obs_critpath.SyncLedger.from_events(events)
+        agg = obs_critpath.aggregate(breakdowns)
+        return {"protocol": "serve", **report, **state,
+                "requests_checked": len(breakdowns),
+                "ttft_p99": agg["ttft"]["p99"] if breakdowns else 0,
+                "sync_wait": ledger.total_wait(),
+                "chaos": fab.chaos_stats()}
+    finally:
+        if own is not None:
+            obs_trace.set_tracer(prev)
+
+
+# ======================================================================
 # suite driver + CLI
 # ======================================================================
 PROTOCOLS = {
@@ -649,6 +854,7 @@ PROTOCOLS = {
     "epoch": run_epoch,
     "lock": run_lock,
     "kv": run_kv,
+    "serve": run_serve,
 }
 
 
@@ -697,7 +903,8 @@ def run_one(protocol: str, n_ranks: int, schedule: str, seed: int,
 
 def run_suite(protocols, n_ranks: int, schedules, seeds,
               trace_dir: str | None = None,
-              check_races: bool = False) -> list[dict]:
+              check_races: bool = False,
+              flight: bool = False) -> list[dict]:
     from repro.core.fabric import FabricError
     from repro.sim.sched import SchedulerError
 
@@ -709,8 +916,13 @@ def run_suite(protocols, n_ranks: int, schedules, seeds,
                                check_races)
                 entry = {"spec": spec, "ok": True, "error": None}
                 # with a trace dir, every run records under a fresh tracer
-                # so a failing run's trace can be exported post-mortem
-                tracer = obs_trace.Tracer() if trace_dir else None
+                # so a failing run's trace can be exported post-mortem;
+                # --flight swaps in the bounded ring (O(1) memory) and adds
+                # the critical-path report to the dump
+                tracer = None
+                if trace_dir:
+                    tracer = (obs_flight.FlightRecorder(dump_dir=trace_dir)
+                              if flight else obs_trace.Tracer())
                 prev = (obs_trace.set_tracer(tracer)
                         if tracer is not None else None)
                 try:
@@ -727,11 +939,17 @@ def run_suite(protocols, n_ranks: int, schedules, seeds,
                         obs_trace.set_tracer(prev)
                 if tracer is not None and not entry["ok"]:
                     os.makedirs(trace_dir, exist_ok=True)
-                    path = os.path.join(
-                        trace_dir,
-                        f"{protocol}-{schedule}-seed{seed}.trace.json")
-                    dump_chrome_trace(tracer, path)
-                    entry["trace"] = path
+                    stem = os.path.join(
+                        trace_dir, f"{protocol}-{schedule}-seed{seed}")
+                    if isinstance(tracer, obs_flight.FlightRecorder):
+                        trace_path, report_path = tracer.dump(
+                            stem, reason=str(entry["error"]))
+                        entry["trace"] = trace_path
+                        entry["critpath"] = report_path
+                    else:
+                        path = stem + ".trace.json"
+                        dump_chrome_trace(tracer, path)
+                        entry["trace"] = path
                 results.append(entry)
     return results
 
@@ -739,7 +957,7 @@ def run_suite(protocols, n_ranks: int, schedules, seeds,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="run the simulated-fabric conformance suite")
-    ap.add_argument("--protocols", default="queue,flow,heap,epoch,lock")
+    ap.add_argument("--protocols", default="queue,flow,heap,epoch,lock,serve")
     ap.add_argument("--ranks", type=int, default=256)
     ap.add_argument("--schedules", default="reorder,delay,duplicate")
     ap.add_argument("--seeds", default="0")
@@ -760,7 +978,13 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-dir", default=None,
                     help="export Perfetto traces of FAILING runs here "
                          "(virtual-time, replay-exact)")
+    ap.add_argument("--flight", action="store_true",
+                    help="record under a bounded flight-recorder ring and "
+                         "dump trace + critical-path report of FAILING "
+                         "runs to --trace-dir (default: sim-traces)")
     args = ap.parse_args(argv)
+    if args.flight and not args.trace_dir:
+        args.trace_dir = "sim-traces"
 
     if args.smoke:
         ranks, seeds = 64, [0, 1, 2]
@@ -777,7 +1001,8 @@ def main(argv=None) -> int:
 
     results = run_suite(protocols, ranks, schedules, seeds,
                         trace_dir=args.trace_dir,
-                        check_races=args.check_races)
+                        check_races=args.check_races,
+                        flight=args.flight)
     lines = []
     n_fail = 0
     for r in results:
@@ -792,6 +1017,8 @@ def main(argv=None) -> int:
             lines.append(f"FAIL {tag}\n  {r['error']}")
             if r.get("trace"):
                 lines.append(f"  trace: {r['trace']}")
+            if r.get("critpath"):
+                lines.append(f"  critpath: {r['critpath']}")
     print("\n".join(lines))
     print(f"\n{len(results) - n_fail}/{len(results)} runs passed "
           f"({len(protocols)} protocols x {len(schedules)} schedules x "

@@ -56,6 +56,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.fabric import Fabric, FabricError, apply_add
+from repro.obs import causal as obs_causal
 from repro.obs import trace as obs_trace
 from repro.sim.sched import VirtualClock
 
@@ -347,6 +348,16 @@ class SimFabric(Fabric):
                             value=new, result=out)
         return out
 
+    def _sync_wait(self, src: Optional[int] = None) -> int:
+        """Virtual ticks a remote-completion sync would block: how far past
+        `clock.now` the last relevant in-flight batch is due.  Trace-only
+        attribution for the sync-plane ledger — the drain itself is
+        unchanged, so interleavings (and ledger snapshots) stay identical
+        whether or not anyone is measuring."""
+        due = [item[0] for item in self._inflight
+               if src is None or item[4]["src"] == src]
+        return max(0, max(due) - self.clock.now) if due else 0
+
     # -------------------------------------------------------------- sync
     def flush(self, src: int) -> None:
         """Local completion (MPI_Win_flush_local): stage src's pending ops
@@ -356,7 +367,9 @@ class SimFabric(Fabric):
 
         tr = obs_trace.TRACER
         if tr.enabled:
-            tr.event("fabric.flush", rank=src)
+            # wait=0: local completion never blocks on remote delivery
+            tr.event("fabric.flush", rank=src, epoch=self.epoch, wait=0,
+                     rids=obs_causal.current_epoch_rids())
         SyncStats.record("flush_msgs", also=self.sync)
         if self.shadow is not None:
             self.shadow.sync("flush", src)
@@ -378,6 +391,11 @@ class SimFabric(Fabric):
         """Remote completion (MPI_Win_flush): every src-originated op is
         applied at its target before this returns."""
         self.flush(src)
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("fabric.flush_remote", rank=src, epoch=self.epoch,
+                     wait=self._sync_wait(src),
+                     rids=obs_causal.current_epoch_rids())
         self._drain_inflight(src)
         if self.shadow is not None:
             self.shadow.sync("flush_remote", src)
@@ -386,11 +404,13 @@ class SimFabric(Fabric):
         """Epoch close: complete everything, everywhere, then advance."""
         for src in sorted(self._pending):
             self.flush(src)
+        # measured before the drain consumes the heap; skipped untraced
+        wait = self._sync_wait() if obs_trace.TRACER.enabled else 0
         self._drain_inflight()
         # every batch applied -> every gate fired; anything left is a bug
         if any(self._gated.values()):
             raise FabricError(f"fence left gated notifications: {self._gated}")
-        self._account_fence()
+        self._account_fence(wait=wait)
         if self.shadow is not None:
             self.shadow.sync("fence")
 

@@ -476,6 +476,34 @@ class TestLint:
                "    return ep.close(t)\n")
         assert self._rules(src) == []
 
+    def test_request_event_without_rid_flagged(self):
+        # ANL006: un-stamped request-lifecycle events disconnect the §15 DAG
+        src = ("def f(tr, r):\n"
+               "    tr.event('serve.request.submit', rank=r)\n")
+        assert self._rules(src) == ["ANL006"]
+
+    def test_request_span_without_rid_flagged(self):
+        src = ("def f(tr, r):\n"
+               "    with tr.span('serve.request.prefill', rank=r):\n"
+               "        work()\n")
+        assert self._rules(src) == ["ANL006"]
+
+    def test_request_event_with_rid_accepted(self):
+        src = ("def f(tr, r, rid):\n"
+               "    tr.event('serve.request.submit', rank=r, rid=rid)\n")
+        assert self._rules(src) == []
+
+    def test_request_event_with_kwargs_splat_accepted(self):
+        # a **attrs splat may carry rid — the rule can't see inside it
+        src = ("def f(tr, r, attrs):\n"
+               "    tr.event('serve.request.submit', rank=r, **attrs)\n")
+        assert self._rules(src) == []
+
+    def test_non_request_event_out_of_scope(self):
+        src = ("def f(tr, r):\n"
+               "    tr.event('fabric.flush', rank=r, wait=3)\n")
+        assert self._rules(src) == []
+
     def test_src_repro_is_clean(self):
         findings = lint.check_paths([os.path.join(REPO, "src", "repro")])
         assert findings == [], "\n".join(str(f) for f in findings)

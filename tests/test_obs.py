@@ -487,3 +487,169 @@ class TestAttendLatencyHistogram:
         h = Histogram()
         h.observe(42.0)
         assert h.percentile(50) == h.percentile(99) == 42.0
+
+
+# ============================================ disabled-span contract (§15 s1)
+class TestNullSpanContract:
+    def test_null_span_is_shared_and_absorbing(self):
+        # one module-level singleton: every disabled span IS the same object
+        assert NULL_TRACER.span("a") is NULL_TRACER.span("b") is NULL_SPAN
+        sp = NULL_TRACER.span("x", rank=3, k=1)
+        assert sp.set(raw=5) is sp               # chains, discards
+        with sp as inner:
+            assert inner is sp
+
+    def test_null_tracer_mirrors_tracer_surface(self):
+        # instrumented code never branches on tracer *type*; the two
+        # tracers must expose the same callables
+        for name in ("event", "span", "attach_clock", "detach_clock",
+                     "enabled"):
+            assert hasattr(NULL_TRACER, name), name
+        NULL_TRACER.event("e", rank=0, a=1)      # all no-ops, no state
+        NULL_TRACER.attach_clock(_TickClock())
+        NULL_TRACER.detach_clock()
+
+    def test_span_rejects_reserved_causal_attrs(self):
+        # edge/cause are instant-event links (obs.causal): a span interval
+        # has no single firing point, so the producer fails loudly
+        tr = Tracer()
+        with pytest.raises(ValueError, match="reserved causal attrs"):
+            tr.span("s", rank=0, edge="1:hop")
+        with pytest.raises(ValueError, match="reserved causal attrs"):
+            tr.span("s", rank=0, cause="1:hop")
+        tr.event("e", rank=0, edge="1:hop", cause="2:hop")  # events: fine
+        assert tr.events[-1]["args"]["edge"] == "1:hop"
+
+    def test_null_span_skips_validation(self):
+        # the disabled path does zero work — including the reserved-attr
+        # check (kwargs are never inspected when tracing is off)
+        assert NULL_TRACER.span("s", edge="1:hop") is NULL_SPAN
+
+    def test_disabled_path_cost_microbench(self):
+        """Pin the zero-cost-when-off contract: the guarded disabled path
+        (attribute load + falsy branch) must be far cheaper than recording.
+        The 2x bound is deliberately generous — the real ratio is >10x —
+        so a noisy CI runner cannot flake this, but an accidental dict
+        build or lock acquisition on the disabled path still fails it."""
+        import time
+
+        n = 20_000
+
+        def loop(tr):
+            t0 = time.perf_counter()
+            for _ in range(n):
+                if tr.enabled:
+                    tr.event("bench.op", rank=0, a=1, b=2)
+            return time.perf_counter() - t0
+
+        disabled = min(loop(NULL_TRACER) for _ in range(3))
+        enabled = min(loop(Tracer()) for _ in range(3))
+        assert disabled * 2 < enabled, (disabled, enabled)
+
+
+# ===================================== histogram deltas + exemplars (§15 s2)
+class TestHistogramSnapshotDelta:
+    def test_hist_delta_summarizes_the_suffix(self):
+        h = Histogram()
+        h.observe(1.0)
+        h.observe(5.0)
+        before = {"lat": h.snapshot(), "n": 2}
+        h.observe(9.0)
+        h.observe(3.0)
+        cur = {"lat": h.snapshot(), "n": 4}
+        d = snapshot_delta(cur, before)
+        assert d["n"] == 2
+        # percentiles don't subtract: the delta is the summary of ONLY the
+        # observations recorded between the two snapshots
+        assert d["lat"]["count"] == 2
+        assert d["lat"]["sum"] == 12.0
+        assert d["lat"]["min"] == 3.0 and d["lat"]["max"] == 9.0
+
+    def test_hist_delta_against_nothing_is_the_full_summary(self):
+        h = Histogram()
+        for v in (2.0, 4.0):
+            h.observe(v)
+        d = snapshot_delta({"lat": h.snapshot()}, None)
+        assert d["lat"]["count"] == 2 and d["lat"]["sum"] == 6.0
+
+    def test_empty_suffix_is_a_zero_summary(self):
+        h = Histogram()
+        h.observe(7.0)
+        snap = {"lat": h.snapshot()}
+        d = snapshot_delta({"lat": h.snapshot()}, snap)
+        assert d["lat"]["count"] == 0
+
+    def test_p99_exemplar_names_the_tail_request(self):
+        h = Histogram()
+        for rid, v in enumerate([10.0, 20.0, 300.0]):
+            h.observe(v, exemplar=rid)
+        s = h.summary()
+        assert s["p99"] == 300.0
+        assert s["p99_exemplar"] == 2            # the rid to go look at
+
+    def test_exemplar_free_summary_keeps_prior_shape(self):
+        h = Histogram()
+        h.observe(5.0)
+        assert "p99_exemplar" not in h.summary()
+
+    def test_latest_exemplar_wins_per_value(self):
+        h = Histogram()
+        h.observe(9.0, exemplar=1)
+        h.observe(9.0, exemplar=2)
+        assert h.summary()["p99_exemplar"] == 2
+
+
+# ================================== export: gzip + bounded traces (§15 s3)
+class TestExportGzipAndTruncation:
+    def _filled(self, n=10):
+        tr = Tracer(clock=_TickClock())
+        for i in range(n):
+            tr.event(f"e{i}", rank=0)
+        return tr
+
+    def test_gzip_roundtrip_and_suffix(self, tmp_path):
+        import gzip
+
+        from repro.obs.export import dump_chrome_trace
+
+        tr = self._filled(3)
+        path = dump_chrome_trace(tr, str(tmp_path / "t.json"), gzipped=True)
+        assert path.endswith("t.json.gz")
+        raw = gzip.decompress((tmp_path / "t.json.gz").read_bytes())
+        assert raw.decode() == dumps_chrome_trace(tr)
+
+    def test_gzip_bytes_are_a_pure_function_of_the_payload(self, tmp_path):
+        from repro.obs.export import dump_chrome_trace
+
+        tr = self._filled(3)
+        dump_chrome_trace(tr, str(tmp_path / "a.json"), gzipped=True)
+        dump_chrome_trace(tr, str(tmp_path / "b.json"), gzipped=True)
+        # mtime pinned to 0, no embedded filename: byte-identity survives
+        # compression, so gzipped flight dumps still replay exactly
+        assert (tmp_path / "a.json.gz").read_bytes() == \
+               (tmp_path / "b.json.gz").read_bytes()
+
+    def test_max_events_keeps_newest_with_marker(self):
+        tr = self._filled(10)
+        doc = chrome_trace(tr, max_events=4)
+        kept = [e["name"] for e in doc["traceEvents"]
+                if e["name"].startswith("e")]
+        assert kept == ["e6", "e7", "e8", "e9"]  # newest survive
+        (mark,) = [e for e in doc["traceEvents"]
+                   if e["name"] == "trace.truncated"]
+        assert mark["args"] == {"dropped": 6, "kept": 4}
+        assert doc["metadata"]["dropped_events"] == 6
+
+    def test_untruncated_trace_has_no_marker(self):
+        doc = chrome_trace(self._filled(3))
+        assert not [e for e in doc["traceEvents"]
+                    if e["name"] == "trace.truncated"]
+        assert doc["metadata"]["dropped_events"] == 0
+
+    def test_truncation_is_logged_to_stderr(self, tmp_path, capsys):
+        from repro.obs.export import dump_chrome_trace
+
+        dump_chrome_trace(self._filled(10), str(tmp_path / "t.json"),
+                          max_events=4)
+        err = capsys.readouterr().err
+        assert "truncated" in err and "6 oldest events cut" in err
