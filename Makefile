@@ -28,7 +28,7 @@ bench-smoke: sim-smoke
 sim-smoke:
 	$(PYTHON) -m repro.sim.conformance --smoke
 	$(PYTHON) -m repro.sim.conformance --ranks 64 --schedules tear \
-		--protocols queue,epoch --seeds 0 --expect-fail
+		--protocols queue,epoch,rendezvous --seeds 0 --expect-fail
 
 # the nightly sweep: 256 ranks, many seeds (override SEED_BASE/SWEEP in CI);
 # failing runs record under the bounded flight recorder (§15) and dump a
@@ -39,26 +39,28 @@ TRACE_DIR ?= sim-traces
 sim-chaos:
 	$(PYTHON) -m repro.sim.conformance --ranks 256 --sweep $(SWEEP) \
 		--seed-base $(SEED_BASE) \
-		--protocols queue,flow,heap,epoch,lock,kv,serve \
+		--protocols queue,flow,heap,epoch,lock,kv,serve,rendezvous,rebind \
 		--flight --trace-dir $(TRACE_DIR)
 	$(PYTHON) -m repro.sim.conformance --ranks 256 --schedules tear \
-		--protocols queue,epoch --sweep $(SWEEP) --seed-base $(SEED_BASE) \
-		--expect-fail
+		--protocols queue,epoch,rendezvous --sweep $(SWEEP) \
+		--seed-base $(SEED_BASE) --expect-fail --flight \
+		--trace-dir $(TRACE_DIR)
 
 lint:
 	ruff check src tests benchmarks examples
 
 # static + runtime memory-model checking (DESIGN.md §14): the repo lint
-# pass, the seven protocols under the shadow race checker (must be clean),
+# pass, the nine protocols under the shadow race checker (must be clean),
 # and the tear fault under the checker (must be CAUGHT)
 check:
 	$(PYTHON) -m repro.analysis.lint src/repro
 	$(PYTHON) -m repro.sim.conformance --smoke --check-races
 	$(PYTHON) -m repro.sim.conformance --ranks 256 \
-		--protocols queue,flow,heap,epoch,lock,kv,serve \
+		--protocols queue,flow,heap,epoch,lock,kv,serve,rendezvous,rebind \
 		--schedules reorder --seeds 0 --check-races
 	$(PYTHON) -m repro.sim.conformance --ranks 64 --schedules tear \
-		--protocols queue,epoch --seeds 0 --check-races --expect-fail
+		--protocols queue,epoch,rendezvous --seeds 0 --check-races \
+		--expect-fail
 
 example-disagg:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \

@@ -10,6 +10,14 @@ simulated ranks under a tracer, re-stitched into per-request DAGs — the
 ``sim_serve`` block carries per-segment TTFT breakdowns (p50/p99 virtual
 ticks, incl. fence/flush wait attribution from the sync-plane ledger),
 which `repro.obs.drift` gates against per-segment budgets.
+
+The §16 transport A/B rides along: the same workload through the eager
+push engine and the rendezvous pull engine at a short-chat and a
+prefill-heavy block size — the ``transport`` block carries per-mode ring
+window bytes (descriptor slots vs payload slots), wire messages per step,
+effective payload bytes per request, and the eager/rendezvous crossover
+from the model; the ``sim_rendezvous`` block is the traced pull-protocol
+slice (64 ranks, delay, seed 0) with the ``kv_pull`` segment attributed.
 """
 import json
 
@@ -19,6 +27,7 @@ import numpy as np
 from benchmarks.bench_rmaq import backpressure_scenario
 from benchmarks.common import emit
 from repro.core.perfmodel import DEFAULT_MODEL
+from repro.rmaq import channel as rch
 from repro.serve.disagg import DisaggConfig, DisaggEngine
 
 # the causal slice is a fixed (ranks, schedule, seed) point: virtual time
@@ -74,6 +83,142 @@ def run_sim_serve() -> dict:
     }
 
 
+def run_sim_rendezvous() -> dict:
+    """Trace the §16 rendezvous pull conformance protocol (same fixed
+    (ranks, schedule, seed) point as ``run_sim_serve``) and attribute every
+    completed pull's TTFT — including the ``kv_pull`` segment (the
+    consumer-issued gets).  Abandoned pulls (the interrupted-pull subset)
+    never reach a first token and are excluded from the breakdowns by
+    construction."""
+    from repro.obs import causal, critpath
+    from repro.obs import trace as obs_trace
+    from repro.sim.conformance import run_one
+
+    tracer = obs_trace.Tracer()
+    report = run_one("rendezvous", SIM_SERVE_RANKS, SIM_SERVE_SCHEDULE,
+                     SIM_SERVE_SEED, tracer=tracer)
+    events = list(tracer.events)
+    dags = causal.build_dags(events)
+    breakdowns = []
+    connected = 0
+    for rid, dag in sorted(dags.items()):
+        bd = critpath.ttft_breakdown(dag)
+        if bd is None:
+            continue
+        connected += bool(dag.connected())
+        cp, _ = critpath.critical_path(dag)
+        bd["critical_path"] = cp
+        bd["wall"] = dag.wall()
+        breakdowns.append(bd)
+    agg = critpath.aggregate(breakdowns)
+    return {
+        "ranks": SIM_SERVE_RANKS,
+        "schedule": SIM_SERVE_SCHEDULE,
+        "seed": SIM_SERVE_SEED,
+        "virtual_time": report["virtual_time"],
+        "requests": len(breakdowns),
+        "connected": connected,
+        "segment_sum_exact": sum(
+            1 for b in breakdowns if b["segment_sum"] == b["ttft"]),
+        "critical_path_le_wall": sum(
+            1 for b in breakdowns if b["critical_path"] <= b["wall"]),
+        "pulled": report["pulled"],
+        "abandoned": report["abandoned"],
+        "descriptor_sends": report["descriptor_sends"],
+        "payload_sends": report["payload_sends"],
+        "ttft_vt": agg["ttft"],
+        "segments_vt": agg["segments"],
+    }
+
+
+# the §16 A/B points: a short-chat block (well under the eager/rendezvous
+# crossover) and a prefill-heavy block — same engines, same prompts, only
+# the transport differs
+TRANSPORT_SIZES = {
+    "short_chat": dict(block_tokens=8, page_tokens=4, d_model=16),
+    "prefill_heavy": dict(block_tokens=32, page_tokens=8, d_model=32),
+}
+
+
+def run_transports(n: int) -> dict:
+    """Eager push vs rendezvous pull on identical workloads (§16).
+
+    Every series must emit token-identical results; the rendezvous engine
+    must issue ZERO ring-payload appends (descriptors only — the payload
+    travels as decoder-issued gets).  The ring window shrinks from
+    payload-sized to descriptor-sized slots, which is the occupancy
+    headline the JSON carries."""
+    mesh = jax.make_mesh((n,), ("serve",))
+    m = DEFAULT_MODEL
+    out = {}
+    for size_name, dims in TRANSPORT_SIZES.items():
+        cfg_kw = dict(
+            n_prefill=n // 2, vocab=61, queue_capacity=8,
+            max_recv_per_step=2, n_lanes=2, flow=True,
+            pool_pages=64, novel_slots=4, **dims)
+        rng = np.random.RandomState(2)
+        n_req = 12
+        prompts = {rid: rng.randint(0, 61, size=dims["block_tokens"])
+                   for rid in range(n_req)}
+        series, results = {}, {}
+        for transport in ("eager", "rendezvous"):
+            cfg = DisaggConfig(transport=transport, **cfg_kw)
+            eng = DisaggEngine(mesh, "serve", cfg, seed=0)
+            for rid, toks in prompts.items():
+                eng.submit(rid, toks)
+            res = eng.run_until_drained()
+            results[transport] = res
+            ch = eng.channel
+            slot_nbytes = 4 * (rch.HDR + ch.payload_words)
+            rdv = eng.rendezvous_stats()
+            series[transport] = {
+                "mode": eng.mode,
+                "requests": n_req,
+                "served": len(res),
+                "block_nbytes": cfg.block_nbytes,
+                "ring_slot_nbytes": slot_nbytes,
+                "ring_window_nbytes": slot_nbytes * cfg.queue_capacity,
+                "ring_payload_appends": eng.ring_payload_appends,
+                "descriptor_appends": eng.descriptor_appends,
+                "wire_msgs_per_step": eng.msg_stats["wire_msgs_per_step"],
+                "bytes_wire_per_req": (eng.steps_run
+                                       * eng.msg_stats["bytes_wire_per_step"]
+                                       / n_req),
+                "effective_payload_bytes_per_req": (
+                    (rdv["descriptor_bytes"] + rdv["pulled_bytes"]) / n_req
+                    if rdv else cfg.block_nbytes),
+                "credit_stalls": eng.credit_stalls,
+                "retries": eng.retries,
+            }
+        assert results["eager"] == results["rendezvous"], (
+            f"{size_name}: pull and push must be token-identical")
+        series["model"] = {
+            "eager_us": m.p_append_eager(float(
+                series["eager"]["block_nbytes"])) * 1e6,
+            "rendezvous_us": m.p_append_rendezvous(
+                float(series["eager"]["block_nbytes"]),
+                DisaggConfig(**cfg_kw).pages_per_block) * 1e6,
+            "selected": m.select_transfer_protocol(
+                float(series["eager"]["block_nbytes"]),
+                DisaggConfig(**cfg_kw).pages_per_block),
+        }
+        out[size_name] = series
+    # the crossover is a sharp flip: eps around f* must change the pick
+    ppb = 16
+    bstar = m.rendezvous_crossover_bytes(ppb)
+    eps = max(bstar * 1e-6, 2.0)
+    out["crossover"] = {
+        "pages_per_block": ppb,
+        "crossover_bytes": bstar,
+        "below": m.select_transfer_protocol(bstar - eps, ppb),
+        "above": m.select_transfer_protocol(bstar + eps, ppb),
+        "flip_exact": int(
+            m.select_transfer_protocol(bstar - eps, ppb)
+            != m.select_transfer_protocol(bstar + eps, ppb)),
+    }
+    return out
+
+
 def run_engines(n: int) -> dict:
     """Both engine modes on the same flooded topology (every prefill rank
     feeds ONE decode rank through a tiny ring)."""
@@ -113,7 +258,9 @@ def main() -> None:
 
     queue_bp = backpressure_scenario()
     engines = run_engines(n)
+    transports = run_transports(n)
     sim_serve = run_sim_serve()
+    sim_rendezvous = run_sim_rendezvous()
 
     kv_bytes = 8 * 2 * 16 * 4.0
     occ_grid = [0.0, 0.25, 0.5, 0.75, 0.9]
@@ -137,7 +284,9 @@ def main() -> None:
         "devices": n,
         "queue_backpressure": queue_bp,
         "serve_engine": engines,
+        "transport": transports,
         "sim_serve": sim_serve,
+        "sim_rendezvous": sim_rendezvous,
         "model": model,
     }
     with open("BENCH_serve_flow.json", "w") as f:
@@ -180,6 +329,38 @@ def main() -> None:
     assert sim_serve["connected"] == sim_serve["requests"]
     assert sim_serve["segment_sum_exact"] == sim_serve["requests"]
     assert sim_serve["critical_path_le_wall"] == sim_serve["requests"]
+    # §16: the pull path moves ZERO payload through the ring, both engines
+    # emit identical tokens (asserted inside run_transports), and the
+    # eager/rendezvous crossover is a sharp flip
+    for size_name in TRANSPORT_SIZES:
+        t = transports[size_name]
+        assert t["rendezvous"]["ring_payload_appends"] == 0, t
+        assert t["rendezvous"]["descriptor_appends"] == t["rendezvous"]["requests"]
+        assert t["eager"]["wire_msgs_per_step"] == 2
+        assert t["rendezvous"]["wire_msgs_per_step"] == 4
+        assert (t["rendezvous"]["ring_window_nbytes"]
+                < t["eager"]["ring_window_nbytes"])
+    assert transports["crossover"]["flip_exact"] == 1
+    assert sim_rendezvous["payload_sends"] == 0
+    assert sim_rendezvous["connected"] == sim_rendezvous["requests"]
+    assert sim_rendezvous["segment_sum_exact"] == sim_rendezvous["requests"]
+
+    for size_name in TRANSPORT_SIZES:
+        t = transports[size_name]
+        emit(f"serve_transport_{size_name}", 0.0,
+             f"block_B={t['eager']['block_nbytes']};"
+             f"ring_window_eager_B={t['eager']['ring_window_nbytes']};"
+             f"ring_window_rdv_B={t['rendezvous']['ring_window_nbytes']};"
+             f"wire_eager={t['eager']['wire_msgs_per_step']};"
+             f"wire_rdv={t['rendezvous']['wire_msgs_per_step']};"
+             f"rdv_ring_payload={t['rendezvous']['ring_payload_appends']}")
+    rsegs = {k: v["p99"] for k, v in sim_rendezvous["segments_vt"].items()}
+    emit("serve_sim_rendezvous", 0.0,
+         f"requests={sim_rendezvous['requests']};"
+         f"abandoned={sim_rendezvous['abandoned']};"
+         f"payload_sends={sim_rendezvous['payload_sends']};"
+         f"ttft_p99_vt={sim_rendezvous['ttft_vt']['p99']};"
+         "seg_p99_vt=" + ",".join(f"{k}:{v:g}" for k, v in sorted(rsegs.items())))
 
 
 if __name__ == "__main__":

@@ -174,6 +174,25 @@ def emit_trajectory(root: str, path: str = "BENCH_trajectory.json") -> dict:
             metrics[f"serve.sim.ttft.{q}_vt"] = ss["ttft_vt"][q]
     if "sync_ledger" in ss:
         metrics["serve.sim.sync_wait_vt"] = ss["sync_ledger"]["total_wait"]
+    # §16 transport slice: eager-vs-rendezvous wire footprint per workload
+    # shape, the modeled crossover, and the 64-rank rendezvous sim TTFT
+    tp = sf.get("transport") or {}
+    for size, ab in tp.items():
+        if size == "crossover":
+            metrics["serve.transport.crossover_bytes"] = ab["crossover_bytes"]
+            continue
+        for proto in ("eager", "rendezvous"):
+            for k in ("ring_window_nbytes", "bytes_wire_per_req",
+                      "wire_msgs_per_step"):
+                metrics[f"serve.transport.{size}.{proto}.{k}"] = ab[proto][k]
+    sr = sf.get("sim_rendezvous") or {}
+    for seg, summ in (sr.get("segments_vt") or {}).items():
+        for q in ("p50", "p99"):
+            if q in summ:
+                metrics[f"serve.rdv.seg.{seg}.{q}_vt"] = summ[q]
+    if "ttft_vt" in sr:
+        for q in ("p50", "p99"):
+            metrics[f"serve.rdv.ttft.{q}_vt"] = sr["ttft_vt"][q]
     if metrics:
         entry["metrics"] = metrics
     series.append(entry)

@@ -5,8 +5,11 @@ Paged mode (DESIGN.md §10): channel messages carry page-table entries —
 into the decode ranks' rmem page pools.  Half the demo's requests share a
 50% prompt prefix, so their prefix pages resolve to pages already resident
 at the routed decoder: a refcount bump instead of a payload transfer.
-Every emitted token is checked against the single-host reference — the
-pool and the channel are load-bearing, not decorative.
+Rendezvous mode (DESIGN.md §16) goes one further: only a descriptor
+travels through the ring and the decoder PULLS the pages with one-sided
+gets when it is ready to attend — zero payload ring slots.  Every emitted
+token is checked against the single-host reference — the pool and the
+channel are load-bearing, not decorative.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/disagg_serve.py
@@ -19,11 +22,13 @@ import numpy as np
 from repro.serve.disagg import DisaggConfig, DisaggEngine
 
 
-def run(mesh, n: int, prompts: dict, paged: bool) -> tuple[dict, "DisaggEngine"]:
+def run(mesh, n: int, prompts: dict, paged: bool = False,
+        transport: str = "eager") -> tuple[dict, "DisaggEngine"]:
     cfg = DisaggConfig(
         n_prefill=max(1, n // 2), block_tokens=16, d_model=32,
         queue_capacity=16, max_recv_per_step=4, n_lanes=2, flow=True,
         paged=paged, page_tokens=4, novel_slots=2, pool_pages=48,
+        transport=transport,
     )
     engine = DisaggEngine(mesh, "serve", cfg, seed=0)
     for rid, toks in prompts.items():
@@ -31,7 +36,7 @@ def run(mesh, n: int, prompts: dict, paged: bool) -> tuple[dict, "DisaggEngine"]
     t0 = time.perf_counter()
     results = engine.run_until_drained()
     dt = time.perf_counter() - t0
-    mode = "paged" if paged else "inline"
+    mode = engine.mode if engine.mode != "inline" else "inline"
     print(f"[{mode}] served {len(results)} requests in {dt*1e3:.1f} ms "
           f"({len(results)/dt:.0f} req/s); "
           f"bytes_wire/req = "
@@ -58,26 +63,36 @@ def main() -> None:
           f"mesh = {max(1, n//2)} prefill + {n - max(1, n//2)} decode ranks")
     res_inline, eng_inline = run(mesh, n, prompts, paged=False)
     res_paged, eng_paged = run(mesh, n, prompts, paged=True)
+    res_rdv, eng_rdv = run(mesh, n, prompts, transport="rendezvous")
 
     ok = sum(res_paged[rid] == eng_paged.reference(toks)
              and res_inline[rid] == eng_paged.reference(toks)
+             and res_rdv[rid] == eng_paged.reference(toks)
              for rid, toks in prompts.items())
     ps = eng_paged.paged_stats()
     fs = eng_paged.flow_stats()
+    rs = eng_rdv.rendezvous_stats()
     print(f"prefix hits: {ps['prefix_hits']} "
           f"(hit rate {ps['prefix_hit_rate']:.2f}), "
           f"novel pages shipped: {ps['novel_pages_shipped']}, "
           f"payload bytes/req: {eng_inline.cfg.block_nbytes} (inline) -> "
           f"{ps['effective_payload_bytes'] / n_requests:.0f} (paged)")
+    print(f"rendezvous: {rs['descriptor_appends']} descriptors "
+          f"({rs['descriptor_bytes']} B) through the ring, "
+          f"{rs['ring_payload_appends']} payload ring slots, "
+          f"{rs['pulled_pages']} pages pulled by the decoders "
+          f"({rs['pulled_bytes']} B as one-sided gets)")
     print(f"page-pool conservation: "
-          f"{'OK' if ps['pool_conservation_ok'] else 'BROKEN'}, "
+          f"{'OK' if ps['pool_conservation_ok'] and rs['pool_conservation_ok'] else 'BROKEN'}, "
           f"credit conservation: {'OK' if fs['conservation_ok'] else 'BROKEN'}, "
           f"retries: {eng_paged.retries}")
-    print(f"decode == single-host reference (both modes): {ok}/{n_requests}")
+    print(f"decode == single-host reference (all 3 modes): {ok}/{n_requests}")
     for rid in sorted(res_paged)[:4]:
         print(f"  req {rid}: token {res_paged[rid]}")
     if ok != n_requests:
         raise SystemExit("MISMATCH between disaggregated and reference decode")
+    if rs["ring_payload_appends"] != 0:
+        raise SystemExit("rendezvous moved payload through the ring")
 
 
 if __name__ == "__main__":

@@ -398,21 +398,126 @@ class PerfModel:
         return "paged" if paged <= inline else "inline"
 
     def paged_crossover_reuse(self, block_bytes: float,
-                              pages_per_block: int) -> float:
-        """Smallest prefix-reuse fraction (1% grid) where paged transport
-        beats inline — the modeled crossover `bench_rmem` documents.  1.0
-        when inline always wins (blocks too small to amortize the table)."""
-        for i in range(101):
-            f = i / 100.0
-            if self.select_kv_transport(block_bytes, pages_per_block, f) == "paged":
-                return f
-        return 1.0
+                              pages_per_block: int,
+                              tol: float = 1e-6) -> float:
+        """Smallest prefix-reuse fraction where paged transport beats
+        inline — the modeled crossover `bench_rmem` documents.  0.0 when
+        paged always wins, 1.0 when inline always wins (blocks too small
+        to amortize the table).
+
+        `p_append_paged` is linear and decreasing in f while the inline
+        cost is constant, so the flip point is unique: bisection converges
+        to it within `tol`, where the old 1% grid could sit a full step
+        off (`select_kv_transport(f*-eps) != select_kv_transport(f*+eps)`
+        is property-tested)."""
+        if self.select_kv_transport(block_bytes, pages_per_block, 0.0) == "paged":
+            return 0.0
+        if self.select_kv_transport(block_bytes, pages_per_block, 1.0) == "inline":
+            return 1.0
+        lo, hi = 0.0, 1.0                     # lo side inline, hi side paged
+        while hi - lo > tol:
+            mid = 0.5 * (lo + hi)
+            if self.select_kv_transport(block_bytes, pages_per_block,
+                                        mid) == "paged":
+                hi = mid
+            else:
+                lo = mid
+        return hi
 
     def prefix_hit_bytes_saved(self, block_bytes: float,
                                reuse_fraction: float) -> float:
         """Payload bytes one request avoids on the wire at reuse f — the
         production cache win the ROADMAP's serving goal banks on."""
         return block_bytes * min(max(reuse_fraction, 0.0), 1.0)
+
+    # -- eager push vs rendezvous pull (DESIGN.md §16) ---------------------
+    def p_append_eager(self, block_bytes: float, hops: int = 1) -> float:
+        """End-to-end eager (sender-push) KV append: the inline enqueue
+        plus the decode side of the bounce — the ring slot must recycle,
+        so the consumer drains the payload out of the ring and copies it
+        again into pool-resident KV before attending.  Slope in block
+        size: 1/ici + 4/hbm."""
+        return (self.p_append_inline(block_bytes, hops)
+                + self.p_queue_dequeue(block_bytes)
+                + 2.0 * block_bytes / self.hw.hbm_bandwidth)
+
+    def p_append_rendezvous(self, block_bytes: float, pages_per_block: int,
+                            hops: int = 1) -> float:
+        """Rendezvous (consumer-pull) KV append: only the 8-byte/page
+        descriptor travels through the ring; the decoder then pulls the
+        pages with one fused one-sided gather (`p_paged_gather`: id list +
+        packed reply, NOT per-page round trips) and bumps the source
+        refcount with a single AMO so the pages stay live until the pull
+        epoch flushes.  Slope in block size: 1/ici + 2/hbm — flatter than
+        eager, which is where the large-block win comes from; the extra
+        descriptor round trip and gather latency is the constant eager
+        avoids on small blocks."""
+        table_bytes = 8.0 * pages_per_block
+        page_bytes = block_bytes / max(pages_per_block, 1)
+        return (self.p_queue_enqueue(table_bytes, hops)
+                + self.p_queue_dequeue(table_bytes)
+                + self.p_paged_gather(pages_per_block, page_bytes, hops)
+                + self.p_message_rate(8.0))           # pull-side ref AMO
+
+    def p_append_paged_e2e(self, block_bytes: float, pages_per_block: int,
+                           reuse_fraction: float, hops: int = 1) -> float:
+        """End-to-end paged-table shipping, comparable with the two costs
+        above: the §10 append (table + novel page puts landing directly in
+        the consumer pool — no bounce copy-out) plus draining the table
+        message from the ring."""
+        return (self.p_append_paged(block_bytes, pages_per_block,
+                                    reuse_fraction, hops)
+                + self.p_queue_dequeue(8.0 * pages_per_block))
+
+    def select_transfer_protocol(
+        self, block_bytes: float, pages_per_block: int,
+        reuse_fraction: float = 0.0,
+    ) -> Literal["eager", "rendezvous", "paged"]:
+        """§6-style dispatch rule for one KV transfer: push the payload
+        (eager), publish a descriptor and let the decoder pull (rendezvous),
+        or ship the page table with sender-pushed novel pages (paged).
+
+        On v5e at f=0, ppb=16 the regimes are: eager below ~1 MB (the
+        descriptor round trip is pure overhead), rendezvous in the
+        multi-MB band (flatter slope: the bounce copy-out is gone),
+        paged for huge or high-reuse blocks (novel pages land in the
+        pool with no gather pack, shared pages never cross the wire).
+        Ties prefer eager, then paged — the structurally simpler paths."""
+        best: Literal["eager", "rendezvous", "paged"] = "eager"
+        cost = self.p_append_eager(block_bytes)
+        paged = self.p_append_paged_e2e(block_bytes, pages_per_block,
+                                        reuse_fraction)
+        if paged < cost:
+            best, cost = "paged", paged
+        rdv = self.p_append_rendezvous(block_bytes, pages_per_block)
+        if rdv < cost:
+            best, cost = "rendezvous", rdv
+        return best
+
+    def rendezvous_crossover_bytes(self, pages_per_block: int,
+                                   tol: float = 1.0) -> float:
+        """Block size where the pairwise eager-vs-rendezvous comparison
+        flips — both costs are affine in block bytes with rendezvous the
+        flatter (2/hbm slope difference), so the flip is unique and
+        bisection converges to it within `tol` bytes.  Returns the lower
+        bound if rendezvous already wins there, the upper if it never
+        does (the same exactness contract as `paged_crossover_reuse`)."""
+        def pull_wins(b: float) -> bool:
+            return (self.p_append_rendezvous(b, pages_per_block)
+                    <= self.p_append_eager(b))
+
+        lo, hi = 8.0, float(64 * 2**20)
+        if pull_wins(lo):
+            return lo
+        if not pull_wins(hi):
+            return hi
+        while hi - lo > tol:
+            mid = 0.5 * (lo + hi)
+            if pull_wins(mid):
+                hi = mid
+            else:
+                lo = mid
+        return hi
 
     # -- model-guided strategy selection (paper §6 example) ----------------
     def select_dispatch(

@@ -20,7 +20,8 @@ two complementary ways:
       ``credit_stall``  blocked on flow-control credit refresh
       ``sync_wait``     inside flush / flush_remote / fence completion
       ``page_alloc``    acquiring KV pages from the remote heap
-      ``kv_wire``       KV bytes in flight on the fabric
+      ``kv_wire``       KV bytes in flight on the fabric (eager push)
+      ``kv_pull``       consumer-issued one-sided KV gets (rendezvous §16)
       ``prefill``       prefill compute
       ``attend``        decode attention compute to the first token
       ``host``          everything not otherwise labelled
@@ -48,7 +49,7 @@ from .causal import RequestDAG, build_dags
 from .metrics import Histogram
 
 SEGMENTS = ("queue_wait", "credit_stall", "sync_wait", "page_alloc",
-            "kv_wire", "prefill", "attend", "host")
+            "kv_wire", "kv_pull", "prefill", "attend", "host")
 
 # sync-plane event names the ledger recognises (instant events with `wait`)
 SYNC_EVENTS = ("fabric.flush", "fabric.flush_remote", "fabric.fence",

@@ -61,11 +61,37 @@ SEGMENT_BUDGET_VT = {
     "sync_wait": 0.0,
     "page_alloc": 300.0,
     "kv_wire": 320.0,
+    "kv_pull": 0.0,          # the eager slice issues no consumer pulls
     "prefill": 350.0,
     "attend": 280.0,
     "host": 0.0,
 }
 TTFT_BUDGET_VT = 600.0
+
+# §16 budgets for the traced rendezvous pull slice (same fixed point: 64
+# ranks, delay, seed 0).  The pull protocol's shape differs from eager
+# serve: descriptors ride the ring (kv_wire is descriptor latency), the
+# payload cost moves into kv_pull (the consumer-issued gets), and a small
+# credit_stall tail is expected because descriptors and grants share the
+# tiny smoke-scale ring.  Budgets sit at ~2x the pinned measurements.
+RENDEZVOUS_SEGMENT_BUDGET_VT = {
+    "queue_wait": 0.0,
+    "credit_stall": 40.0,
+    "sync_wait": 0.0,
+    "page_alloc": 50.0,
+    "kv_wire": 380.0,
+    "kv_pull": 200.0,
+    "prefill": 350.0,
+    "attend": 150.0,
+    "host": 0.0,
+}
+RENDEZVOUS_TTFT_BUDGET_VT = 650.0
+
+# §16 structural wire counts: the eager engine's fused append is 2 wire
+# transfers per step; the rendezvous engine adds the pull's fused gather
+# (2 get transfers: id scatter + payload reply), never a ring payload.
+EAGER_WIRE_MSGS_PER_STEP = 2
+RENDEZVOUS_WIRE_MSGS_PER_STEP = 4
 
 
 def _entry(bench: str, metric: str, predicted: float, observed: float,
@@ -157,7 +183,68 @@ def _collect_serve_flow(doc: dict) -> list[dict]:
     if credit is not None:
         out.append(_entry("serve_flow", "engine.credit.retries", 0,
                           credit["retries"]))
+    out.extend(_collect_transport(doc.get("transport")))
     out.extend(_collect_sim_serve(doc.get("sim_serve")))
+    out.extend(_collect_sim_rendezvous(doc.get("sim_rendezvous")))
+    return out
+
+
+def _collect_transport(tp: Optional[dict]) -> list[dict]:
+    """§16 transport gates: the pull path issues ZERO ring-payload
+    transfers (descriptors only), both engines' per-step wire counts are
+    structural, and the modeled eager/rendezvous crossover is a sharp
+    flip (selecting at f* − ε and f* + ε must disagree)."""
+    if not tp:
+        return []
+    out = []
+    for size_name, series in tp.items():
+        if size_name == "crossover":
+            out.append(_entry(
+                "serve_flow", "transport.crossover.flip_exact",
+                1, series["flip_exact"]))
+            continue
+        out.append(_entry(
+            "serve_flow", f"transport.{size_name}.rdv.ring_payload_appends",
+            0, series["rendezvous"]["ring_payload_appends"]))
+        out.append(_entry(
+            "serve_flow", f"transport.{size_name}.rdv.wire_msgs_per_step",
+            RENDEZVOUS_WIRE_MSGS_PER_STEP,
+            series["rendezvous"]["wire_msgs_per_step"]))
+        out.append(_entry(
+            "serve_flow", f"transport.{size_name}.eager.wire_msgs_per_step",
+            EAGER_WIRE_MSGS_PER_STEP,
+            series["eager"]["wire_msgs_per_step"]))
+        out.append(_entry(
+            "serve_flow", f"transport.{size_name}.rdv.descriptor_appends",
+            series["rendezvous"]["requests"],
+            series["rendezvous"]["descriptor_appends"]))
+    return out
+
+
+def _collect_sim_rendezvous(ss: Optional[dict]) -> list[dict]:
+    """§16 causal gates over the traced rendezvous slice: zero payload
+    sends in the descriptor ring (COUNT_TOL — structural), complete and
+    exact stitching of every completed pull, and the kv_pull segment
+    within its latency budget."""
+    if not ss:
+        return []
+    n = ss.get("requests", 0)
+    out = [
+        _entry("sim_rendezvous", "payload_sends", 0, ss["payload_sends"]),
+        _entry("sim_rendezvous", "requests_connected", n, ss["connected"]),
+        _entry("sim_rendezvous", "segment_sum_exact", n,
+               ss["segment_sum_exact"]),
+        _entry("sim_rendezvous", "critical_path_le_wall", n,
+               ss["critical_path_le_wall"]),
+        _budget_entry("sim_rendezvous", "ttft.p99_vt",
+                      RENDEZVOUS_TTFT_BUDGET_VT, ss["ttft_vt"]["p99"]),
+    ]
+    segs = ss.get("segments_vt", {})
+    for seg, budget in RENDEZVOUS_SEGMENT_BUDGET_VT.items():
+        summ = segs.get(seg)
+        if summ is not None:
+            out.append(_budget_entry(
+                "sim_rendezvous", f"seg.{seg}.p99_vt", budget, summ["p99"]))
     return out
 
 

@@ -76,6 +76,24 @@ class CollectiveStrategist:
         past the model's payload threshold)."""
         return plan_mod.choose_backend(self.model, nbytes, shift_eligible)
 
+    def transfer_plan(self, block_bytes: float, pages_per_block: int,
+                      reuse_fraction: float = 0.0) -> dict:
+        """KV-block transfer protocol (DESIGN.md §16): eager sender-push
+        through the ring, rendezvous descriptor-publish + consumer-pull
+        gets, or the dedup'd paged-table path.  Returns the chosen protocol
+        with the modeled per-append latencies and the eager/rendezvous
+        crossover payload so callers can log the decision."""
+        m = self.model
+        return {
+            "protocol": m.select_transfer_protocol(
+                block_bytes, pages_per_block, reuse_fraction),
+            "eager_s": m.p_append_eager(block_bytes),
+            "rendezvous_s": m.p_append_rendezvous(block_bytes, pages_per_block),
+            "paged_s": m.p_append_paged_e2e(
+                block_bytes, pages_per_block, reuse_fraction),
+            "crossover_bytes": m.rendezvous_crossover_bytes(pages_per_block),
+        }
+
 
 # ----------------------------------------------------- gradient-sync overlap
 def bucket_grads(grads: Any, bucket_bytes: int = 32 * 2**20) -> list[list]:

@@ -33,16 +33,36 @@ class ChannelError(RuntimeError):
     pass
 
 
+LANE_KINDS = ("payload", "descriptor")
+
+
 class Lane(NamedTuple):
-    """A typed lane: fixed payload shape + 32-bit dtype."""
+    """A typed lane: fixed payload shape + 32-bit dtype.
+
+    `kind` tags what the lane carries: ``"payload"`` lanes move the data
+    itself (eager push — the ring bounds the transfer size), while
+    ``"descriptor"`` lanes carry only rendezvous descriptors (page tables /
+    heap extents + generation tags) whose referents the consumer pulls with
+    one-sided gets (§16).  The kind changes no wire format — it lets flow
+    control and the drift gates account ring traffic by class, e.g. assert
+    that a pull-mode engine issues ZERO ring-payload transfers.
+    """
 
     name: str
     shape: tuple
     dtype: Any = jnp.float32
+    kind: str = "payload"
 
 
 def _lane_width(lane: Lane) -> int:
     return int(np.prod(lane.shape)) if lane.shape else 1
+
+
+def _lane_kind(lane) -> str:
+    kind = getattr(lane, "kind", "payload")
+    if kind not in LANE_KINDS:
+        raise ChannelError(f"lane kind must be one of {LANE_KINDS}, got {kind!r}")
+    return kind
 
 
 def _check_dtype(dtype) -> None:
@@ -108,9 +128,10 @@ class Channel:
         return jnp.concatenate([lax.bitcast_convert_type(hdr_i, jnp.float32), flat], axis=1)
 
     def homogeneous(self) -> bool:
-        """Whether every lane shares one payload shape + dtype — the
+        """Whether every lane shares one payload shape + dtype + kind — the
         precondition for runtime (data-dependent) lane selection."""
-        return len({(l.shape, jnp.dtype(l.dtype)) for l in self.lanes}) == 1
+        return len({(l.shape, jnp.dtype(l.dtype), _lane_kind(l))
+                    for l in self.lanes}) == 1
 
     # ------------------------------------------------- send/recv (SPMD path)
     def packed(
@@ -200,7 +221,10 @@ def channel_allocate(
     lanes: Sequence[Lane],
 ) -> tuple[Channel, rq.QueueState]:
     """One ring per rank sized for the widest lane (+HDR header words)."""
-    lanes = tuple(Lane(l.name, tuple(l.shape), jnp.dtype(l.dtype)) for l in lanes)
+    lanes = tuple(
+        Lane(l.name, tuple(l.shape), jnp.dtype(l.dtype), _lane_kind(l))
+        for l in lanes
+    )
     names = [l.name for l in lanes]
     if len(set(names)) != len(names):
         raise ChannelError(f"duplicate lane names: {names}")
@@ -225,7 +249,10 @@ class HostChannel:
 
     def __init__(self, p: int, capacity: int, lanes: Sequence[Lane], fabric=None,
                  name: str = "q"):
-        self.lanes = tuple(Lane(l.name, tuple(l.shape), np.dtype(l.dtype)) for l in lanes)
+        self.lanes = tuple(
+            Lane(l.name, tuple(l.shape), np.dtype(l.dtype), _lane_kind(l))
+            for l in lanes
+        )
         for lane in self.lanes:
             if np.dtype(lane.dtype).itemsize != 4:
                 raise ChannelError(f"lane dtypes must be 32-bit, got {lane.dtype}")
@@ -269,6 +296,7 @@ class HostChannel:
             out.append(
                 {
                     "lane": lane.name,
+                    "kind": lane.kind,
                     "src": int(hdr[1]),
                     "tag": int(hdr[2]),
                     "payload": payload.copy(),

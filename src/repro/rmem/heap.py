@@ -634,6 +634,31 @@ class HostPagePool:
             return True
         return False
 
+    def pin(self, idx: int, origin: int = 0) -> int:
+        """Pull-side liveness pin (rendezvous protocol, §16): one remote
+        fetch-and-add before the puller issues its gets, so the source
+        page cannot reach refcount 0 — and thus cannot be freed and
+        reallocated — while the pull epoch is in flight.  Returns the
+        page's current generation tag; the puller revalidates it with
+        `tag_valid` after the data lands (a mismatch means the descriptor
+        was stale *before* the pin took hold and the pull must retry).
+        Raises on a dead page, exactly like `ref_add`."""
+        self.ref_add(idx, 1, origin=origin)
+        return self.tag(idx)
+
+    def unpin(self, idx: int, tag: int, origin: int = 0) -> bool:
+        """Drop a pull pin once the pulled bytes are consumed (or the pull
+        is abandoned).  The tag must be the one `pin` returned — unpinning
+        across a generation change means the pin was not actually covering
+        the page the caller read.  True if this unpin freed the page."""
+        if not self.tag_valid(idx, tag):
+            err = HeapError(
+                f"unpin of page {idx} with stale tag {tag} "
+                f"(now {self.tag(idx)})")
+            obs_flight.on_error(err, tag=self.name)
+            raise err
+        return self.release(idx, origin=origin)
+
     def tag(self, idx: int) -> int:
         """Current generation of a page — cache alongside the id."""
         return int(self.gen[idx])

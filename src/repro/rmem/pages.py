@@ -306,6 +306,54 @@ def scatter_pages(axis: str, pool: Array, payload: Array, slot: Array,
     return flat_pool.reshape(pool.shape)
 
 
+def gather_pages(axis: str, pool: Array, entries: Array,
+                 valid: Array) -> Array:
+    """Pull pages from their owners' pools by descriptor (collective;
+    inside shard_map) — the rendezvous data path (§16).
+
+    pool [n_pages, *ps] (local view), entries [m, ppb, 2] int32
+    ((owner, page_id) rows, the published descriptor), valid [m] bool.
+    The *consumer* initiates: one fused get carries the wanted-id lists to
+    every owner, the owners' packed replies come back on a second fused
+    get — two wire transfers total, batched across every (request, page)
+    pair, never per-page round trips.  Returns [m, ppb, *ps] with invalid
+    requests zeroed.  Runs on all ranks (SPMD): ranks that want nothing
+    send empty id lists but still serve replies from their pool.
+    """
+    p = compat.axis_size(axis)
+    n_pages = pool.shape[0]
+    m, ppb = entries.shape[0], entries.shape[1]
+    S = m * ppb                                          # flat pull slots
+    owner = entries[..., ENTRY_OWNER].reshape(S)
+    pid = entries[..., ENTRY_PAGE].reshape(S)
+    want = (jnp.repeat(valid, ppb) & (owner >= 0) & (owner < p)
+            & (pid >= 0) & (pid < n_pages))
+    orow = jnp.where(want, owner, p).astype(jnp.int32)   # p = drop row
+    j = jnp.arange(S, dtype=jnp.int32)
+    # slot j of row d: the page id I want from owner d (or -1)
+    send_ids = jnp.full((p, S), -1, jnp.int32).at[orow, j].set(
+        jnp.where(want, pid, -1), mode="drop")
+
+    plan = plan_mod.RmaPlan(axis)
+    h_ids = plan.put_all_to_all(send_ids, kind="gets")   # id lists out
+    plan.flush(aggregate=True)
+    recv_ids = h_ids.result().reshape(p, S)              # [requester, slot]
+
+    # serve every requester from my pool; -1 slots reply zero pages
+    flat_pool = pool.reshape(n_pages, -1)
+    reply = gather_local(flat_pool, recv_ids)            # [p, S, w]
+
+    plan = plan_mod.RmaPlan(axis)
+    h_pay = plan.put_all_to_all(reply, kind="gets")      # packed replies
+    plan.flush(aggregate=True)
+    recv_pay = h_pay.result().reshape(p, S, -1)          # [owner, slot, w]
+
+    osafe = jnp.clip(orow, 0, p - 1)
+    out = recv_pay[osafe, j]                             # [S, w]
+    out = jnp.where(want[:, None], out, jnp.zeros_like(out))
+    return out.reshape((m, ppb) + pool.shape[1:])
+
+
 def gather_local(pool: Array, ids: Array) -> Array:
     """Owner-local page-table gather: pool [n_pages, *ps], ids [...k] int32
     (-1 = zero page).  No communication — the decoder reading its own pool."""

@@ -98,6 +98,36 @@ class DisaggConfig:
     # KV block); "gather" is the A/B baseline that materializes the block
     # (`rpg.gather_local`) and attends over the copy
     attend: str = "fused"
+    # KV transfer protocol (DESIGN.md §16).  "eager" keeps the historical
+    # behavior (sender-push; `paged` decides payload vs page-table wire
+    # format).  "rendezvous" publishes a descriptor over a descriptor-kind
+    # lane and the DECODER pulls the pages with one-sided gets — no payload
+    # ever occupies a ring slot.  "auto" asks the perf model
+    # (`select_transfer_protocol`) to pick per the configured block size
+    # and `expected_reuse` fraction.
+    transport: str = "eager"
+    expected_reuse: float = 0.0
+
+    def __post_init__(self) -> None:
+        # fail at config time, not first engine build: these combinations
+        # have no meaning and an engine would only reject them later
+        if self.transport not in ("eager", "rendezvous", "auto"):
+            raise ValueError(
+                f"transport must be 'eager', 'rendezvous' or 'auto', "
+                f"got {self.transport!r}")
+        if not 0.0 <= self.expected_reuse <= 1.0:
+            raise ValueError(
+                f"expected_reuse must be in [0, 1], got {self.expected_reuse}")
+        if self.transport != "eager":
+            if self.paged:
+                raise ValueError(
+                    "transport= and paged=True are exclusive: paged is the "
+                    "legacy eager-mode switch (use transport='auto' with "
+                    "expected_reuse to let the model pick paged shipping)")
+            if not self.flow:
+                raise ValueError(
+                    f"transport={self.transport!r} needs credit flow "
+                    "control (flow=True)")
 
     @property
     def pages_per_block(self) -> int:
@@ -128,6 +158,24 @@ class DisaggConfig:
         return self.pages_per_block * rpg.ENTRY_WORDS * 4
 
 
+def resolve_transport(cfg: DisaggConfig, model=None) -> str:
+    """Resolve `cfg.transport` to a concrete protocol — "eager",
+    "rendezvous", or "paged".  "auto" delegates to the §16 crossover model
+    (`PerfModel.select_transfer_protocol` via `CollectiveStrategist`):
+    small blocks push eagerly, the multi-MB band pulls by descriptor,
+    huge or high-reuse blocks ship page tables.  Pure function of the
+    config so tests can probe the selection without building an engine."""
+    if cfg.transport != "auto":
+        return cfg.transport
+    from repro.parallel.overlap import CollectiveStrategist
+
+    strat = CollectiveStrategist() if model is None \
+        else CollectiveStrategist(model=model)
+    plan = strat.transfer_plan(float(cfg.block_nbytes), cfg.pages_per_block,
+                               cfg.expected_reuse)
+    return str(plan["protocol"])
+
+
 def _requeue_rejected(pending: list, staged: dict, sent_ok) -> int:
     """Splice this step's rejected sends back onto the head of `pending`
     in *staging order* (ascending prefill rank = the order they were popped),
@@ -154,7 +202,33 @@ class DisaggEngine:
             raise ValueError(f"need 0 < n_prefill < {self.p}, got {cfg.n_prefill}")
         if cfg.n_lanes < 1:
             raise ValueError(f"need n_lanes >= 1, got {cfg.n_lanes}")
-        if cfg.paged:
+        if cfg.transport not in ("eager", "rendezvous", "auto"):
+            raise ValueError(
+                f"transport must be 'eager', 'rendezvous' or 'auto', "
+                f"got {cfg.transport!r}")
+        if not 0.0 <= cfg.expected_reuse <= 1.0:
+            raise ValueError(
+                f"expected_reuse must be in [0, 1], got {cfg.expected_reuse}")
+        if cfg.transport != "eager":
+            if cfg.paged:
+                raise ValueError(
+                    "transport= and paged=True are exclusive: paged is the "
+                    "legacy eager-mode switch (use transport='auto' with "
+                    "expected_reuse to let the model pick paged shipping)")
+            if not cfg.flow:
+                raise ValueError(
+                    f"transport={cfg.transport!r} needs credit flow control "
+                    "(flow=True)")
+        # resolve the configured transport to a concrete engine mode:
+        # "inline" (eager payload push), "paged" (eager page-table
+        # shipping), or "rendezvous" (descriptor publish + consumer pull)
+        self.transport_selected = resolve_transport(cfg)
+        if cfg.transport == "eager":
+            self.mode = "paged" if cfg.paged else "inline"
+        else:
+            self.mode = {"eager": "inline", "paged": "paged",
+                         "rendezvous": "rendezvous"}[self.transport_selected]
+        if self.mode in ("paged", "rendezvous"):
             if not cfg.flow:
                 raise ValueError("paged mode needs credit flow control (flow=True)")
             if cfg.block_tokens % cfg.page_tokens:
@@ -167,7 +241,7 @@ class DisaggEngine:
                 raise ValueError(
                     f"pool_pages {cfg.pool_pages} < pages_per_block "
                     f"{cfg.pages_per_block}: no request could ever map")
-            if cfg.attend not in ("fused", "gather"):
+            if self.mode == "paged" and cfg.attend not in ("fused", "gather"):
                 raise ValueError(
                     f"attend must be 'fused' or 'gather', got {cfg.attend!r}")
         self.n_decode = self.p - cfg.n_prefill
@@ -186,22 +260,35 @@ class DisaggEngine:
         # credit domains.  Inline mode ships the KV block [bt, 2, d] itself;
         # paged mode ships the page table [pages_per_block, 2] int32 instead
         # (the §10 wire format) and moves page payloads through the pool.
-        if cfg.paged:
+        # Rendezvous mode ships the same table but as a DESCRIPTOR-kind
+        # lane (§16): it names prefill-resident pages the decoder will pull,
+        # so credits only ever cover descriptor-width slots.
+        lane_kind = "payload"
+        if self.mode == "rendezvous":
+            lane_shape, lane_dtype = (cfg.pages_per_block, rpg.ENTRY_WORDS), jnp.int32
+            lane_kind = "descriptor"
+        elif self.mode == "paged":
             lane_shape, lane_dtype = (cfg.pages_per_block, rpg.ENTRY_WORDS), jnp.int32
         else:
             lane_shape, lane_dtype = (cfg.block_tokens, 2, cfg.d_model), jnp.float32
-        lanes = [rch.Lane(f"kv{i}", lane_shape, lane_dtype)
+        lanes = [rch.Lane(f"kv{i}", lane_shape, lane_dtype, lane_kind)
                  for i in range(cfg.n_lanes)]
-        if cfg.paged:
-            # decoder-owned page pools: device payload storage + the host
-            # allocator mirror (free lists, refcounts, prefix index)
+        if self.mode in ("paged", "rendezvous"):
+            # page pools: device payload storage + the host allocator mirror
+            # (free lists, refcounts, prefix index).  Paged mode's pools are
+            # DECODER-owned (prefill scatters novel pages into them);
+            # rendezvous pools are PREFILL-owned — pages stay at the rank
+            # that computed them until the decoder pulls.
             self.pool = jax.device_put(
                 jnp.zeros((self.p, cfg.pool_pages, cfg.page_tokens, 2,
                            cfg.d_model), jnp.float32),
                 jax.sharding.NamedSharding(mesh, P(axis, None, None, None, None)),
             )
+            owners = (list(range(cfg.n_prefill))
+                      if self.mode == "rendezvous"
+                      else list(range(cfg.n_prefill, self.p)))
             self.kv = rpg.PagedKVPool(
-                owners=list(range(cfg.n_prefill, self.p)),
+                owners=owners,
                 n_pages=cfg.pool_pages,
                 page_words=cfg.page_tokens * 2 * cfg.d_model,
             )
@@ -240,6 +327,13 @@ class DisaggEngine:
         self.pool_stalls = 0       # requests deferred: pool had no free page
         self.novel_pages_shipped = 0
         self.appends = 0           # channel appends (admitted requests)
+        self.ring_payload_appends = 0   # appends on payload-kind lanes
+        self.descriptor_appends = 0     # appends on descriptor-kind lanes
+        self.pulled_pages = 0      # pages pulled to completion (rendezvous)
+        # rendezvous pull pins: rid -> [(owner, page_id, tag)] taken when the
+        # descriptor is published, dropped when the token lands (or the
+        # request is cancelled) — the §16 liveness protocol's host mirror
+        self._pins: dict[int, list[tuple[int, int, int]]] = {}
         self.steps_run = 0
         # request-lifecycle latency ledgers (§12): TTFT = submit -> result
         # landing; TBT = engine-wide gap between consecutive result landings
@@ -248,12 +342,16 @@ class DisaggEngine:
         self.metrics = MetricsRegistry()
         self._t_submit: dict[int, float] = {}
         self._t_staged: dict[int, float] = {}   # rid -> staging wall time
-        self._stalled: set[int] = set()         # rids that hit a stall while queued
+        # rid -> why it last stalled while queued ("credit" | "pool").
+        # Entries are popped on EVERY terminal transition (staging, result
+        # landing, cancel, DrainError) — a leaked rid would mis-attribute a
+        # later request that reuses the id to a stall it never paid.
+        self._stalled: dict[int, str] = {}
         self._t_last_result: float | None = None
 
     # ----------------------------------------------------------- device step
     def _build_step(self):
-        cfg, axis = self.cfg, self.axis
+        cfg, axis, mode = self.cfg, self.axis, self.mode
         n_prefill, n_decode = cfg.n_prefill, self.n_decode
         ch = self.channel
         qspecs = rq.state_specs(axis)
@@ -280,7 +378,81 @@ class DisaggEngine:
             kv_in, mask = ch.payload_all(batch)            # [m, bt, 2, d]
             return readout(params, kv_in, mask, batch.tag)
 
-        if cfg.paged:
+        if mode == "rendezvous":
+            def ship_rdv(params, qstate, fstate, pool, ptab, req_id, dest,
+                         lane, novel_toks, novel_slot):
+                """Rendezvous step (§16): prefill writes novel KV pages into
+                its OWN pool slice (owner-local, zero wire), publishes the
+                descriptor (page table) over the descriptor lane, and the
+                decode side — gated by its drain width, i.e. only when it is
+                ready to attend — pulls the pages with one fused one-sided
+                gather and attends in the same step.  No KV payload ever
+                occupies a ring slot.  All per-rank [1, ...] inputs except
+                pool."""
+                me = jax.lax.axis_index(axis)
+                qstate = rq.to_local(qstate)
+                fstate = rfl.to_local(fstate)
+                pool_l = pool[0]                           # [pages, pt, 2, d]
+                rid = req_id[0]
+
+                # 1. novel pages land in MY pool: owner-local writes, the
+                # payload never leaves the prefill rank at publish time
+                toks = jnp.clip(novel_toks[0], 0, cfg.vocab - 1)   # [S, pt]
+                kv_pages = jnp.stack(
+                    [params["emb_k"][toks], params["emb_v"][toks]], axis=2
+                )                                          # [S, pt, 2, d]
+                slot = novel_slot[0]
+                n_pages = pool_l.shape[0]
+                rows = jnp.where(slot >= 0, slot, n_pages)
+                pool_l = (pool_l.reshape(n_pages, -1)
+                          .at[rows].set(kv_pages.reshape(slot.shape[0], -1),
+                                        mode="drop")
+                          .reshape(pool_l.shape))
+
+                # 2. descriptor append: the only thing that rides the ring
+                is_prefill = (me < n_prefill) & (rid >= 0)
+                dest_eff = jnp.where(is_prefill, dest[0], -1).astype(jnp.int32)
+                qstate, fstate, receipt = rfl.send(
+                    ch, qstate, fstate, "kv0",
+                    ptab[0][None], rid[None], dest_eff[None], lane[0],
+                )
+
+                # 3. drain descriptors — the decoder's readiness gate
+                qstate, fstate, batch = rfl.recv(
+                    ch, qstate, fstate, cfg.max_recv_per_step)
+                entries, mask = ch.payload_all(batch)      # [m, ppb, 2] i32
+
+                # 4. pull: one fused get epoch against the owners' pools,
+                # then attend over the pulled block immediately
+                kv_pages_in = rpg.gather_pages(axis, pool_l, entries, mask)
+                m = kv_pages_in.shape[0]
+                kv_in = kv_pages_in.reshape(
+                    m, cfg.block_tokens, 2, cfg.d_model)
+                out_req, out_tok = readout(params, kv_in, mask, batch.tag)
+                sent_ok = receipt.accepted[0] & is_prefill
+                return (
+                    rq.to_global(qstate), rfl.to_global(fstate), pool_l[None],
+                    out_req[None], out_tok[None],
+                    sent_ok[None], receipt.rejected[None],
+                )
+
+            pspec = P(axis, None, None, None, None)
+            return jax.jit(
+                shard_map(
+                    ship_rdv,
+                    mesh=self.mesh,
+                    in_specs=(P(), qspecs, fspecs, pspec,
+                              P(axis, None, None), P(axis), P(axis),
+                              P(axis, None), P(axis, None, None),
+                              P(axis, None)),
+                    out_specs=(qspecs, fspecs, pspec,
+                               P(axis, None), P(axis, None),
+                               P(axis), P(axis, None)),
+                    check_vma=False,
+                )
+            )
+
+        if mode == "paged":
             def ship(params, qstate, fstate, pool, ptab, req_id, dest, lane,
                      novel_toks, novel_slot, novel_dest):
                 """Paged shipping step: scatter novel KV pages into decoder
@@ -451,7 +623,7 @@ class DisaggEngine:
         from repro.core.rma import OpCounter
 
         cfg = self.cfg
-        if cfg.paged:
+        if self.mode in ("paged", "rendezvous"):
             state = (self.params, self.qstate, self.fstate, self.pool)
         elif self.fstate is None:
             state = (self.params, self.qstate)
@@ -462,14 +634,17 @@ class DisaggEngine:
         req_id = jax.ShapeDtypeStruct((self.p,), jnp.int32)
         dest = jax.ShapeDtypeStruct((self.p,), jnp.int32)
         lane = jax.ShapeDtypeStruct((self.p, 1), jnp.int32)
-        if cfg.paged:
+        if self.mode in ("paged", "rendezvous"):
             ptab = jax.ShapeDtypeStruct(
                 (self.p, cfg.pages_per_block, rpg.ENTRY_WORDS), jnp.int32)
             novel_toks = jax.ShapeDtypeStruct(
                 (self.p, cfg.novel_slots, cfg.page_tokens), jnp.int32)
             novel_i = jax.ShapeDtypeStruct((self.p, cfg.novel_slots), jnp.int32)
-            args = like + (ptab, req_id, dest, lane, novel_toks, novel_i,
-                           novel_i)
+            if self.mode == "rendezvous":
+                args = like + (ptab, req_id, dest, lane, novel_toks, novel_i)
+            else:
+                args = like + (ptab, req_id, dest, lane, novel_toks, novel_i,
+                               novel_i)
         else:
             tokens = jax.ShapeDtypeStruct((self.p, cfg.block_tokens), jnp.int32)
             args = like + (tokens, req_id, dest, lane)
@@ -507,20 +682,26 @@ class DisaggEngine:
         rank that produced the token — the consumer end of the request's
         KV edge, which closes the cross-rank causal DAG (obs.causal)."""
         now = time.perf_counter()
+        # a result landing is a terminal transition: drop any recorded stall
+        # reason even when the submit timestamp is already gone (the old
+        # discard sat inside the t0 branch and leaked rids whose ledger
+        # entry was consumed elsewhere — a later request reusing the id then
+        # inherited credit_stall/page_alloc attribution it never paid)
+        self._stalled.pop(rid, None)
         t0 = self._t_submit.pop(rid, None)
         if t0 is not None:
             ttft_us = (now - t0) * 1e6
             self.metrics.histogram("serve.ttft_us").observe(ttft_us,
                                                             exemplar=rid)
             t_staged = self._t_staged.pop(rid, None)
+            wire_seg = "kv_pull" if self.mode == "rendezvous" else "kv_wire"
             if t_staged is not None:
-                self.metrics.histogram("seg.kv_wire_us").observe(
+                self.metrics.histogram(f"seg.{wire_seg}_us").observe(
                     (now - t_staged) * 1e6)
-            self._stalled.discard(rid)
             tr = obs_trace.TRACER
             if tr.enabled:
                 tr.event("serve.request.decode", rid=rid, rank=rank,
-                         cause=obs_causal.edge(rid, "kv"), seg="kv_wire")
+                         cause=obs_causal.edge(rid, "kv"), seg=wire_seg)
                 tr.event("serve.request.first_token", rid=rid, rank=rank,
                          seg="attend", ttft_us=int(ttft_us))
         if self._t_last_result is not None:
@@ -540,6 +721,8 @@ class DisaggEngine:
                 self.metrics.histogram("seg.queue_wait_us").summary(),
             "seg.kv_wire_us":
                 self.metrics.histogram("seg.kv_wire_us").summary(),
+            "seg.kv_pull_us":
+                self.metrics.histogram("seg.kv_pull_us").summary(),
         }
 
     def _host_credits(self) -> np.ndarray:
@@ -623,7 +806,7 @@ class DisaggEngine:
                 job = self._map_request(rid, toks)
                 if job is None:
                     self._pending.insert(0, (rid, toks))   # pool dry: wait
-                    self._stalled.add(int(rid))
+                    self._stalled[int(rid)] = "pool"
                     tr = obs_trace.TRACER
                     if tr.enabled:
                         tr.event("serve.request.pool_stall", rank=r,
@@ -642,7 +825,8 @@ class DisaggEngine:
                     # sat out a dry pool — then it waited on page releases
                     tr.event("serve.request.page_alloc", rank=r,
                              rid=int(rid), pages=len(job["entries"]),
-                             seg=("page_alloc" if int(rid) in self._stalled
+                             seg=("page_alloc"
+                                  if self._stalled.get(int(rid)) == "pool"
                                   else "queue_wait"))
             if self._rank_job[r] is None:
                 continue
@@ -676,7 +860,7 @@ class DisaggEngine:
             sel = self._select_lane(budget, r, targets=(t,))
             if sel is None:
                 self.credit_stalls += 1
-                self._stalled.add(int(job["rid"]))
+                self._stalled[int(job["rid"])] = "credit"
                 tr = obs_trace.TRACER
                 if tr.enabled:
                     tr.event("serve.request.credit_stall", rank=r,
@@ -688,6 +872,7 @@ class DisaggEngine:
             budget[r, t, ln] -= 1
             self.lane_sends[t, ln] += 1
             self.appends += 1
+            self.ring_payload_appends += 1
             appended[r] = job["rid"]
             tr = obs_trace.TRACER
             if tr.enabled:
@@ -695,9 +880,13 @@ class DisaggEngine:
                 # it carries the request's KV edge in paged mode
                 tr.event("serve.request.append", rank=r, rid=int(job["rid"]),
                          dst=int(t), lane=int(ln),
-                         seg=("credit_stall" if int(job["rid"]) in self._stalled
+                         seg=("credit_stall"
+                              if self._stalled.get(int(job["rid"])) == "credit"
                               else "host"),
                          edge=obs_causal.edge(int(job["rid"]), "kv"))
+            # the stall (if any) is paid for and attributed: clear it so a
+            # later reuse of the rid starts clean
+            self._stalled.pop(int(job["rid"]), None)
 
         (self.qstate, self.fstate, self.pool, entries, mask, tags, sent_ok,
          rejected) = self._step(
@@ -733,7 +922,10 @@ class DisaggEngine:
         emitted = 0
         for rr in range(cfg.n_prefill, p):
             for rid, tok in zip(out_req[rr], out_tok[rr]):
-                if rid >= 0:
+                # a cancelled rid may still deliver a stale token; counting
+                # it toward the drain quota would end run_until_drained with
+                # a LIVE request still in flight
+                if rid >= 0 and int(rid) in self._submitted_ids:
                     self.results[int(rid)] = int(tok)
                     self._observe_result(int(rid), rank=rr)
                     for ref in self.kv.table_release(int(rid)):
@@ -741,9 +933,217 @@ class DisaggEngine:
                     emitted += 1
         return emitted
 
+    def _map_request_rdv(self, rid: int, toks: np.ndarray, owner: int):
+        """Rendezvous shipping job: acquire (or share) every page of the
+        request in the PREFILL rank's own pool — the pages never move at
+        publish time.  None when the pool is dry (rolled back, request
+        waits for pull completions to release pages)."""
+        cfg = self.cfg
+        pages_toks = rpg.split_pages(toks, cfg.page_tokens)
+        entries, novel = [], []
+        hits0, miss0 = self.kv.hits, self.kv.misses
+        for ptoks in pages_toks:
+            res = self.kv.acquire(owner, rpg.page_key(ptoks))
+            if res is None:
+                for ref in entries:
+                    self.kv.release_ref(ref)
+                self.kv.hits, self.kv.misses = hits0, miss0
+                self.pool_stalls += 1
+                return None
+            ref, shared = res
+            entries.append(ref)
+            if not shared:
+                novel.append((ref.page_id, ptoks))
+        self.kv.table_set(rid, entries)
+        return {"rid": rid, "owner": owner, "entries": entries,
+                "novel": novel, "next": 0}
+
+    def _rendezvous_step(self) -> int:
+        """One rendezvous engine step (§16): stage novel pages into the
+        prefill ranks' own pools, publish descriptors for requests whose
+        pages are all resident (pinning every named page so it stays live
+        for the pull), run the device step — descriptor ring + fused pull
+        + attend — and release pins when tokens land."""
+        cfg, p = self.cfg, self.p
+        S, ppb = cfg.novel_slots, cfg.pages_per_block
+        ptab = np.full((p, ppb, rpg.ENTRY_WORDS), -1, np.int32)
+        req_id = np.full((p,), -1, np.int32)
+        dest = np.full((p,), -1, np.int32)
+        lane = np.zeros((p, 1), np.int32)
+        novel_toks = np.full((p, S, cfg.page_tokens), -1, np.int32)
+        novel_slot = np.full((p, S), -1, np.int32)
+
+        budget = self._host_credits()
+        appended: dict[int, int] = {}
+        pool_dry = False
+        for r in range(cfg.n_prefill):
+            if self._rank_job[r] is None and self._pending and not pool_dry:
+                rid, toks = self._pending.pop(0)
+                job = self._map_request_rdv(rid, toks, r)
+                if job is None:
+                    self._pending.insert(0, (rid, toks))   # pool dry: wait
+                    self._stalled[int(rid)] = "pool"
+                    tr = obs_trace.TRACER
+                    if tr.enabled:
+                        tr.event("serve.request.pool_stall", rank=r,
+                                 rid=int(rid), seg="queue_wait")
+                    pool_dry = True
+                    continue
+                self._jobs[rid] = job
+                self._rank_job[r] = rid
+                now = time.perf_counter()
+                self._t_staged[int(rid)] = now
+                self.metrics.histogram("seg.queue_wait_us").observe(
+                    (now - self._t_submit.get(int(rid), now)) * 1e6)
+                tr = obs_trace.TRACER
+                if tr.enabled:
+                    tr.event("serve.request.page_alloc", rank=r,
+                             rid=int(rid), pages=len(job["entries"]),
+                             seg=("page_alloc"
+                                  if self._stalled.get(int(rid)) == "pool"
+                                  else "queue_wait"))
+            if self._rank_job[r] is None:
+                continue
+            job = self._jobs[self._rank_job[r]]
+            # stage up to novel_slots of the job's unwritten novel pages
+            # into MY pool (owner-local device writes, zero wire traffic)
+            n_stage = min(S, len(job["novel"]) - job["next"])
+            for s in range(n_stage):
+                pid, ptoks = job["novel"][job["next"] + s]
+                novel_toks[r, s] = ptoks
+                novel_slot[r, s] = pid
+                self._page_ready.add((r, pid))
+            job["next"] += n_stage
+            self.novel_pages_shipped += n_stage
+            # publish once every page (own novels AND shared pages written
+            # by earlier jobs at this rank) is resident, and a descriptor
+            # credit is available toward some decode rank
+            resident = all((ref.owner, ref.page_id) in self._page_ready
+                           for ref in job["entries"])
+            if job["next"] < len(job["novel"]) or not resident:
+                continue
+            sel = self._select_lane(budget, r)
+            if sel is None:
+                self.credit_stalls += 1
+                self._stalled[int(job["rid"])] = "credit"
+                tr = obs_trace.TRACER
+                if tr.enabled:
+                    tr.event("serve.request.credit_stall", rank=r,
+                             rid=int(job["rid"]), seg="host")
+                continue
+            t, ln = sel
+            # pin every named page before the descriptor goes out: the
+            # puller's refcount bump (heap.pin, an AMO against the owner's
+            # ref bank) keeps the source pages live until the pull epoch
+            # completes — a concurrent release can free nothing we named
+            rid_j = int(job["rid"])
+            pins = [(ref.owner, ref.page_id,
+                     self.kv.pools[ref.owner].pin(ref.page_id, origin=t))
+                    for ref in job["entries"]]
+            self._pins[rid_j] = pins
+            ptab[r] = self.kv.table_entries(rid_j)
+            req_id[r], dest[r], lane[r, 0] = rid_j, t, ln
+            budget[r, t, ln] -= 1
+            self.lane_sends[t, ln] += 1
+            self.appends += 1
+            self.descriptor_appends += 1
+            appended[r] = rid_j
+            tr = obs_trace.TRACER
+            if tr.enabled:
+                # the descriptor append carries the request's KV edge: it is
+                # what licenses the decoder's pull
+                tr.event("serve.request.publish", rank=r, rid=rid_j,
+                         dst=int(t), lane=int(ln),
+                         nbytes=cfg.table_nbytes,
+                         seg=("credit_stall"
+                              if self._stalled.get(rid_j) == "credit"
+                              else "host"),
+                         edge=obs_causal.edge(rid_j, "kv"))
+            self._stalled.pop(rid_j, None)   # stall paid + attributed
+
+        (self.qstate, self.fstate, self.pool, out_req, out_tok, sent_ok,
+         rejected) = self._step(
+            self.params, self.qstate, self.fstate, self.pool,
+            jnp.asarray(ptab), jnp.asarray(req_id), jnp.asarray(dest),
+            jnp.asarray(lane), jnp.asarray(novel_toks),
+            jnp.asarray(novel_slot),
+        )
+        self.steps_run += 1
+        if int(np.asarray(rejected).sum()):
+            raise RuntimeError(
+                "credit conservation violated: a credited descriptor append "
+                "was rejected at the ring")
+        sent_ok = np.asarray(sent_ok)
+        for r, rid in appended.items():
+            if not bool(sent_ok[r]):
+                raise RuntimeError(
+                    f"credited descriptor append not delivered: {rid}")
+            self._rank_job[r] = None        # the prefill rank frees up
+            del self._jobs[rid]
+
+        out_req, out_tok = np.asarray(out_req), np.asarray(out_tok)
+        emitted = 0
+        for rr in range(cfg.n_prefill, p):
+            for rid, tok in zip(out_req[rr], out_tok[rr]):
+                # a cancelled rid may still deliver a stale token — its pins
+                # and table are already rolled back, and the token must not
+                # count toward the drain quota (a live request could still
+                # be in flight behind it)
+                if rid >= 0 and int(rid) in self._submitted_ids:
+                    self.results[int(rid)] = int(tok)
+                    self._observe_result(int(rid), rank=rr)
+                    # pull complete: drop the pull pins, then the table refs
+                    for owner, pid, tag in self._pins.pop(int(rid), []):
+                        self.kv.pools[owner].unpin(pid, tag, origin=rr)
+                        self.pulled_pages += 1
+                    if int(rid) in self.kv.page_tables:
+                        for ref in self.kv.table_release(int(rid)):
+                            self._page_ready.discard((ref.owner, ref.page_id))
+                    emitted += 1
+        return emitted
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request host-side — the "puller dies before flush" path.
+        Rolls back everything the request holds: pull pins (if the
+        descriptor was already published), page-table refs, queue slots,
+        ledger entries.  Refcount conservation is the contract: after a
+        cancel the pages a dead pull named are reclaimable (no leak), which
+        `tests/test_rendezvous` asserts via pool conservation.  True if the
+        rid was known."""
+        rid = int(rid)
+        known = False
+        job = self._jobs.pop(rid, None)
+        if job is not None:
+            known = True
+            for r, j in enumerate(self._rank_job):
+                if j == rid:
+                    self._rank_job[r] = None
+        for owner, pid, tag in self._pins.pop(rid, []):
+            self.kv.pools[owner].unpin(pid, tag, origin=owner)
+            known = True
+        if self.kv is not None and rid in self.kv.page_tables:
+            for ref in self.kv.table_release(rid):
+                self._page_ready.discard((ref.owner, ref.page_id))
+            known = True
+        before = len(self._pending)
+        self._pending = [x for x in self._pending if int(x[0]) != rid]
+        known = known or len(self._pending) != before
+        if rid in self._submitted_ids and rid not in self.results:
+            self._submitted_ids.discard(rid)
+            self._n_submitted -= 1
+        self._t_submit.pop(rid, None)
+        self._t_staged.pop(rid, None)
+        self._stalled.pop(rid, None)
+        tr = obs_trace.TRACER
+        if tr.enabled:
+            tr.event("serve.request.cancel", rid=rid)
+        return known
+
     def step(self) -> int:
         """One engine step: assign pending requests to prefill ranks, run the
         jitted SPMD step, collect decode outputs.  Returns #tokens emitted."""
+        if self.mode == "rendezvous":
+            return self._rendezvous_step()
         if self.cfg.paged:
             return self._paged_step()
         cfg, p = self.cfg, self.p
@@ -763,7 +1163,7 @@ class DisaggEngine:
                 if sel is None:
                     self.credit_stalls += 1
                     rid_wait = int(self._pending[0][0])
-                    self._stalled.add(rid_wait)
+                    self._stalled[rid_wait] = "credit"
                     tr = obs_trace.TRACER
                     if tr.enabled:
                         # milestone: time up to this stall was pure queue
@@ -788,9 +1188,12 @@ class DisaggEngine:
                     tr.event("serve.request.kv_transfer", rank=r, rid=int(rid),
                              dst=int(t), lane=int(ln),
                              nbytes=cfg.block_nbytes,
-                             seg=("credit_stall" if int(rid) in self._stalled
+                             seg=("credit_stall"
+                                  if self._stalled.get(int(rid)) == "credit"
                                   else "queue_wait"),
                              edge=obs_causal.edge(int(rid), "kv"))
+                self._stalled.pop(int(rid), None)   # stall paid + attributed
+                self.ring_payload_appends += 1
         else:
             # legacy: round-robin by request id, single implicit lane
             for r in range(cfg.n_prefill):
@@ -834,7 +1237,8 @@ class DisaggEngine:
         emitted = 0
         for r in range(cfg.n_prefill, p):
             for rid, tok in zip(out_req[r], out_tok[r]):
-                if rid >= 0:
+                # cancelled rids may still emit; see _rendezvous_step
+                if rid >= 0 and int(rid) in self._submitted_ids:
                     self.results[int(rid)] = int(tok)
                     self._observe_result(int(rid), rank=r)
                     emitted += 1
@@ -849,8 +1253,23 @@ class DisaggEngine:
         while len(self.results) < self._n_submitted:
             if steps >= max_steps:
                 undrained = sorted(self._submitted_ids - set(self.results))
+                # each undrained rid carries why it is stuck: a published
+                # descriptor whose pull never completed ("pull"), a recorded
+                # credit/pool stall, or plain queue residence.  The ledger
+                # is cleared here — DrainError is a terminal transition too
+                # (the _stalled leak regression).
+                reasons = {}
+                for rid in undrained:
+                    if rid in self._pins:
+                        reasons[rid] = "pull"
+                    elif rid in self._stalled:
+                        reasons[rid] = self._stalled[rid]
+                    else:
+                        reasons[rid] = "queue"
+                self._stalled.clear()
                 err = DrainError(
-                    f"not drained after {max_steps} steps", tuple(undrained)
+                    f"not drained after {max_steps} steps", tuple(undrained),
+                    reasons=reasons,
                 )
                 obs_flight.on_error(err, tag="disagg")
                 raise err
@@ -883,7 +1302,7 @@ class DisaggEngine:
         workload actually ran (dense epochs: every staged-or-not slot pays,
         like all this engine's accounting).
         """
-        if not self.cfg.paged:
+        if self.mode != "paged":
             return {}
         ks = self.kv.stats()
         return {
@@ -904,6 +1323,31 @@ class DisaggEngine:
             "wire_bytes_total": self.steps_run
             * self.msg_stats["bytes_wire_per_step"],
             "pool_conservation_ok": self.kv.conservation()["ok"],
+        }
+
+    def rendezvous_stats(self) -> dict:
+        """Rendezvous-mode instrumentation (§16): descriptor-lane traffic vs
+        the pull path.  The headline invariant is `ring_payload_appends == 0`
+        — the ring moves descriptors only; every KV byte travels as a
+        one-sided get issued by the decoder when it is ready to attend.
+        """
+        if self.mode != "rendezvous":
+            return {}
+        ks = self.kv.stats()
+        return {
+            "transport_selected": self.transport_selected,
+            "descriptor_appends": self.descriptor_appends,
+            "ring_payload_appends": self.ring_payload_appends,
+            "descriptor_bytes": self.descriptor_appends * self.cfg.table_nbytes,
+            "pulled_pages": self.pulled_pages,
+            "pulled_bytes": self.pulled_pages * self.cfg.page_nbytes,
+            "pool_stalls": self.pool_stalls,
+            "prefix_hits": ks["hits"],
+            "prefix_hit_rate": ks["hit_rate"],
+            "pins_outstanding": sum(len(v) for v in self._pins.values()),
+            "pool_conservation_ok": self.kv.conservation()["ok"],
+            "wire_msgs_per_step": self.msg_stats["wire_msgs_per_step"],
+            "wire_bytes_per_step": self.msg_stats["bytes_wire_per_step"],
         }
 
     def flow_stats(self) -> dict:

@@ -57,11 +57,22 @@ class LockDisciplineError(RuntimeError):
 
 
 class DrainError(RuntimeError):
-    """`run_until_drained` exhausted `max_steps` with work still queued."""
+    """`run_until_drained` exhausted `max_steps` with work still queued.
 
-    def __init__(self, message: str, undrained: tuple):
-        super().__init__(f"{message}; undrained request ids: {list(undrained)}")
+    `reasons` (optional) maps each undrained rid to why it is stuck —
+    ``"credit"`` (deferred on a dry credit window), ``"pool"`` (page pool
+    dry), ``"pull"`` (rendezvous descriptor published but the pull never
+    completed), or ``"queue"`` (never left the pending queue)."""
+
+    def __init__(self, message: str, undrained: tuple,
+                 reasons: dict | None = None):
+        detail = f"{message}; undrained request ids: {list(undrained)}"
+        if reasons:
+            detail += "; stall reasons: " + ", ".join(
+                f"{rid}={reasons[rid]}" for rid in undrained if rid in reasons)
+        super().__init__(detail)
         self.undrained = tuple(undrained)
+        self.reasons = dict(reasons or {})
 
 
 class ScheduleTick(NamedTuple):

@@ -27,6 +27,13 @@ simulated step**:
     one *connected* cross-rank DAG whose critical-path segment sum equals
     its measured TTFT exactly (virtual time), with every credited send
     admitted (rejected == 0) and every KV page returned.
+  * rendezvous: the §16 pull protocol — descriptors only in the ring
+    (checked structurally per event: every advertised slot is a well-formed
+    2-word descriptor), pull pins keep source pages live, interrupted pulls
+    reclaim, pool conservation at every event.
+  * rebind: producer credit caches must REBASE (not ``max``) across an
+    elastic re-attach of the consumer's window — the stale-grant livelock
+    guard, checked with conservation at every event.
 
 Every run is a pure function of its ``(seed, schedule)`` pair; a violation
 raises `ConformanceError` carrying the exact repro command line.  The
@@ -64,7 +71,7 @@ from repro.obs import trace as obs_trace
 from repro.obs.export import dump_chrome_trace
 from repro.ft.elastic import kv_membership_change
 from repro.rmaq import queue as rq
-from repro.rmaq.channel import Lane
+from repro.rmaq.channel import HDR, Lane
 from repro.rmaq.flow import HostFlowChannel
 from repro.rmaq.queue import HostQueueGroup
 from repro.rmem import heap
@@ -845,6 +852,396 @@ def run_serve(spec: RunSpec, reqs: int = 3, n_pages: int = 2) -> dict:
 
 
 # ======================================================================
+# rendezvous: descriptor-publish + consumer-pull, no payload in the ring
+# ======================================================================
+def run_rendezvous(spec: RunSpec, reqs: int = 3, n_pages: int = 3) -> dict:
+    """The §16 rendezvous pull protocol as a conformance run.
+
+    Prefill rank i pairs with decode rank ``n_pairs + i``, but unlike
+    ``serve`` the KV pages live in the PREFILL rank's own pool and the ring
+    carries only 2-word descriptors ``(page, generation)`` over a
+    ``descriptor``-kind lane: publish is owner-local (zero payload wire),
+    and the decoder — when it is ready — pins the named page through the
+    owner's refcount bank (`HostPagePool.pin`), validates the generation
+    tag, pulls the payload, and only then drops the pin and the producer's
+    reference.  Invariants checked per event: every credited descriptor is
+    admitted (``rejected == 0``) and pool conservation holds at the swept
+    owner.  Structural no-payload invariant: every drained message must be
+    descriptor-kind and exactly 2 words wide.
+
+    A deterministic subset of requests is *abandoned* by the decoder after
+    the descriptor arrives but before the pin — the "puller dies before
+    flush" path.  Their pages stay live on the producer's reference alone
+    until the post-run reaper drops it; at quiescence every pool must be
+    fully free (refcount conservation across an interrupted pull).
+
+    Under ``tear`` the descriptor decouples from its referent: the stale
+    ``(page, gen)`` fails the tag compare, pins a dead page, or reads a
+    payload that no longer matches the rid — each surfaces as a
+    `ConformanceError` (the schedule MUST be caught).
+    """
+    p = spec.n_ranks
+    if p < 2:
+        raise ConformanceError(spec, 0, "rendezvous needs >= 2 ranks")
+    n_pairs = max(1, p // 4)
+    capacity = 1 << max(3, (2 * n_pairs - 1).bit_length())
+
+    own = obs_trace.Tracer() if not obs_trace.TRACER.enabled else None
+    prev = obs_trace.set_tracer(own) if own is not None else None
+    try:
+        sweep = itertools.count()
+
+        def checker(kind, who, sched):
+            if hfc.rejected:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"{hfc.rejected} credited descriptor sends rejected")
+            # every advertised ring slot must hold a fully-written 2-word
+            # descriptor THE MOMENT the notification is visible (§6.1:
+            # payload visible => notification visible).  A tail counter
+            # that ran ahead of its row — the tear fault, notification not
+            # gated on payload — shows up here as a zero/garbage header on
+            # the very event that exposed it, not whenever a decoder task
+            # happens to drain next.
+            grp = hfc.ch.group
+            cap = grp.buf.shape[1]
+            for t in range(n_pairs, 2 * n_pairs):
+                head = int(grp.ctrs[t, rq.HEAD])
+                tail = int(grp.ctrs[t, rq.TAIL])
+                for s in range(head, tail):
+                    hdr = grp.buf[t, s % cap, :HDR].view(np.int32)
+                    if (hdr[0] != 0 or hdr[3] != 2
+                            or not 0 <= hdr[1] < n_pairs):
+                        raise ConformanceError(
+                            spec, sched.events,
+                            f"target {t} ring slot {s % cap} advertised by "
+                            f"tail={tail} holds a torn descriptor (header "
+                            f"{hdr.tolist()}): notification not gated on "
+                            "payload delivery")
+            # round-robin conservation sweep over the owner pools: free
+            # list + live refcounts must partition every pool at all times
+            i = next(sweep) % n_pairs
+            c = pools[i].conservation()
+            if c["free_plus_live"] != c["capacity"]:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"owner pool {i} conservation: {c}")
+
+        fab, sched = _harness(spec, checker)
+        tracer = obs_trace.TRACER
+        hfc = HostFlowChannel(
+            p, capacity, [Lane("desc", (2,), "int32", kind="descriptor")],
+            n_producers=n_pairs, fabric=fab, name="rdvq", causal_tags=True)
+        # pools are owned by the PREFILL ranks: publish never moves payload
+        pools = {i: heap.HostPagePool(
+                     n_pages, page_words=8, fabric=fab,
+                     name=f"rdvpool{i}", owner=i)
+                 for i in range(n_pairs)}
+        rid_ctr = itertools.count(1)
+        inflight: dict[int, tuple[int, int]] = {}       # rid -> (owner, page)
+        abandoned: set[int] = set()
+        done_by = collections.Counter()
+        state = {"submitted": 0, "pulled": 0, "abandoned": 0,
+                 "credit_stalls": 0, "pool_stalls": 0}
+        n_total = n_pairs * reqs
+
+        def prefill(i: int):
+            r, t = i, n_pairs + i
+            rng = _rng(spec.seed, 59 * i + 29)
+            tr = obs_trace.TRACER
+            for _ in range(reqs):
+                rid = next(rid_ctr)
+                tr.event("serve.request.submit", rank=r, rid=rid)
+                for _ in range(rng.randint(1, 2)):      # prefill compute
+                    yield
+                tr.event("serve.request.prefill", rank=r, rid=rid,
+                         seg="prefill")
+                # the page comes from MY pool — owner-local alloc
+                with obs_causal.request_scope(rid):
+                    pid = pools[r].alloc(origin=r)
+                while pid is None:
+                    state["pool_stalls"] += 1
+                    yield
+                    with obs_causal.request_scope(rid):
+                        pid = pools[r].alloc(origin=r)
+                tr.event("serve.request.page_alloc", rank=r, rid=rid,
+                         page=pid, seg="page_alloc")
+                pools[r].pages[pid][0] = rid            # the "KV" payload
+                desc = np.int32([pid, pools[r].tag(pid)])
+                while not hfc.send(r, "desc", desc, rid, t):
+                    state["credit_stalls"] += 1
+                    yield
+                inflight[rid] = (r, pid)
+                state["submitted"] += 1
+                yield
+
+        def decoder(i: int):
+            t = n_pairs + i
+            tr = obs_trace.TRACER
+            while done_by[t] < reqs:
+                try:
+                    msgs = hfc.recv(t, 4)
+                except (ValueError, IndexError) as e:
+                    raise ConformanceError(
+                        spec, sched.events,
+                        f"decode rank {t}: malformed delivery: {e}")
+                for m in msgs:
+                    rid = int(m["tag"])
+                    words = np.asarray(m["payload"]).ravel()
+                    # structural no-payload invariant: the ring slot holds a
+                    # 2-word descriptor on a descriptor-kind lane, never KV
+                    if m.get("kind") != "descriptor" or m["lane"] != "desc" \
+                            or words.size != 2:
+                        raise ConformanceError(
+                            spec, sched.events,
+                            f"decode rank {t}: ring slot for request {rid} "
+                            f"is not a pure descriptor (kind={m.get('kind')!r}"
+                            f" lane={m['lane']!r} words={words.size})")
+                    if rid not in inflight or rid in abandoned:
+                        raise ConformanceError(
+                            spec, sched.events,
+                            f"decode rank {t}: descriptor for request {rid} "
+                            "duplicated or unknown")
+                    owner = int(m["src"])
+                    pid, tag0 = int(words[0]), int(words[1])
+                    tr.event("serve.request.decode", rank=t, rid=rid,
+                             cause=obs_causal.edge(
+                                 rid, f"flow{owner}-{t}"),
+                             seg="kv_wire")
+                    if rid % 5 == 0:
+                        # the puller dies before flush: descriptor consumed,
+                        # pin never taken — the producer's ref alone keeps
+                        # the page live until the reaper drops it
+                        abandoned.add(rid)
+                        state["abandoned"] += 1
+                        done_by[t] += 1
+                        continue
+                    try:
+                        with obs_causal.request_scope(rid):
+                            pools[owner].pin(pid, origin=t)
+                    except (heap.HeapError, ValueError, IndexError) as e:
+                        raise ConformanceError(
+                            spec, sched.events,
+                            f"decode rank {t}: pull pin for request {rid} "
+                            f"hit a dead/garbage descriptor ({e}) — "
+                            "descriptor decoupled from its referent")
+                    if not pools[owner].tag_valid(pid, tag0):
+                        raise ConformanceError(
+                            spec, sched.events,
+                            f"decode rank {t}: request {rid} descriptor tag "
+                            f"{tag0} stale at pin (page {pid} now "
+                            f"{pools[owner].tag(pid)})")
+                    yield                               # the pull epoch:
+                    val = int(pools[owner].pages[pid][0])   # chaos window
+                    if not pools[owner].tag_valid(pid, tag0):
+                        raise ConformanceError(
+                            spec, sched.events,
+                            f"decode rank {t}: page {pid} generation moved "
+                            f"under a held pin (request {rid})")
+                    if val != rid:
+                        raise ConformanceError(
+                            spec, sched.events,
+                            f"decode rank {t}: pulled payload {val} != "
+                            f"request {rid} (pin did not cover the pull)")
+                    tr.event("serve.request.pull", rank=t, rid=rid,
+                             page=pid, seg="kv_pull")
+                    yield                               # attend compute
+                    tr.event("serve.request.first_token", rank=t, rid=rid,
+                             seg="attend")
+                    with obs_causal.request_scope(rid):
+                        pools[owner].unpin(pid, tag0, origin=t)  # pull pin
+                        pools[owner].release(pid, origin=t)      # producer ref
+                    inflight.pop(rid)
+                    done_by[t] += 1
+                    state["pulled"] += 1
+                yield
+
+        def driver():
+            while state["pulled"] + state["abandoned"] < n_total:
+                with obs_causal.epoch_scope(sorted(inflight)):
+                    hfc.flush()
+                    if sched.events % 2:
+                        fab.fence()
+                yield
+
+        for i in range(n_pairs):
+            sched.spawn(f"pre{i:04d}", prefill(i))
+            sched.spawn(f"dec{i:04d}", decoder(i))
+        sched.spawn("driver", driver())
+        report = sched.run()
+
+        fab.fence()
+        # reaper: drop the producer refs of the abandoned pulls — the pages
+        # a dead puller named must come back (refcount conservation)
+        for rid in sorted(abandoned):
+            owner, pid = inflight.pop(rid)
+            pools[owner].release(pid, origin=owner)
+        for i, pool in pools.items():
+            if pool.live_count() != 0:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"owner pool {i}: {pool.live_count()} pages leaked "
+                    "after interrupted pulls were reaped")
+        if hfc.sends_by_kind["payload"] != 0:
+            raise ConformanceError(
+                spec, sched.events,
+                f"{hfc.sends_by_kind['payload']} ring-payload sends on the "
+                "pull path (must be descriptor-only)")
+
+        # ---- causal invariants, as in `serve` (abandoned rids excepted)
+        events = list(tracer.events)
+        dags = obs_causal.build_dags(events)
+        ring_dropped = getattr(tracer, "dropped", 0)
+        breakdowns = []
+        for rid in range(1, n_total + 1):
+            if rid in abandoned or rid % 5 == 0:
+                continue
+            dag = dags.get(rid)
+            if dag is None or dag.find("serve.request.submit") is None \
+                    or dag.find("serve.request.first_token") is None:
+                if ring_dropped:
+                    continue
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"request {rid}: trace missing or incomplete")
+            if not dag.connected():
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"request {rid}: causal DAG disconnected across ranks "
+                    f"{sorted(dag.ranks())}")
+            bd = obs_critpath.ttft_breakdown(dag)
+            if bd["segment_sum"] != bd["ttft"]:
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"request {rid}: segment sum {bd['segment_sum']} != "
+                    f"TTFT {bd['ttft']}: {bd['segments']}")
+            cp, _ = obs_critpath.critical_path(dag)
+            if cp > dag.wall():
+                raise ConformanceError(
+                    spec, sched.events,
+                    f"request {rid}: critical path {cp} exceeds wall "
+                    f"{dag.wall()}")
+            breakdowns.append(bd)
+
+        agg = obs_critpath.aggregate(breakdowns)
+        return {"protocol": "rendezvous", **report, **state,
+                "requests_checked": len(breakdowns),
+                "descriptor_sends": hfc.sends_by_kind["descriptor"],
+                "payload_sends": hfc.sends_by_kind["payload"],
+                "descriptor_bytes": hfc.bytes_by_kind["descriptor"],
+                "kv_pull_p99": (agg["segments"].get("kv_pull", {})
+                                .get("p99", 0) if breakdowns else 0),
+                "ttft_p99": agg["ttft"]["p99"] if breakdowns else 0,
+                "chaos": fab.chaos_stats()}
+    finally:
+        if own is not None:
+            obs_trace.set_tracer(prev)
+
+
+# ======================================================================
+# rebind: stale credit cache across an elastic re-attach must rebase
+# ======================================================================
+def run_rebind(spec: RunSpec) -> dict:
+    """Elastic membership vs the producer-side credit cache (§9/§14).
+
+    Rank ``p-1`` is a pure consumer; every other rank produces.  Phase 1
+    drives every producer deterministically dry (each spends its full
+    initial grant, the consumer never drains).  Phase 2 fences the fabric
+    and re-attaches the consumer's window (`HostFlowChannel.rebind`):
+    fresh ring, fresh grants, bumped attach id.  Phase 3 resumes the
+    producers: their first send finds the cache dry, refreshes, sees the
+    attach id moved, and REBASES (limit := fresh grants, sent := 0)
+    instead of ``max``-ing against the stale pre-rebind grant — without
+    the guard the refreshed limit equals the already-spent counter and
+    every post-rebind send defers forever (deterministic livelock, which
+    the scheduler surfaces).  Phase 4 drains and asserts every
+    post-rebind send arrived; credit conservation and ``rejected == 0``
+    are checked at every event throughout.
+    """
+    p = spec.n_ranks
+    if p < 2:
+        raise ConformanceError(spec, 0, "rebind needs >= 2 ranks")
+    T = p - 1
+    nprod = p - 1
+    capacity = 1 << max(3, (2 * nprod - 1).bit_length())
+
+    def checker(kind, who, sched):
+        if hfc.rejected:
+            raise ConformanceError(
+                spec, sched.events,
+                f"{hfc.rejected} credited sends rejected at the ring")
+        c = hfc.conservation(T)
+        if c["granted_minus_head"] != capacity:
+            raise ConformanceError(
+                spec, sched.events,
+                f"credit conservation at target {T} across rebind: {c}")
+
+    fab, sched = _harness(spec, checker)
+    hfc = HostFlowChannel(p, capacity, [Lane("c", (1,), "float32")],
+                          n_producers=nprod, fabric=fab, name="rebq")
+    state = {"dry": 0, "rebound": False, "sent_pre": 0, "sent_post": 0,
+             "recv_post": 0}
+
+    def producer(r: int):
+        # phase 1: spend the whole initial grant, then go dry
+        while hfc.send(r, "c", np.float32([r]), r, T):
+            state["sent_pre"] += 1
+            yield
+        state["dry"] += 1
+        while not state["rebound"]:
+            yield
+        # phase 3: the cache is stale (sent == old limit); the send's
+        # refresh must observe the bumped attach id and rebase
+        while not hfc.send(r, "c", np.float32([1000 + r]), r, T):
+            yield
+        state["sent_post"] += 1
+        yield
+
+    def driver():
+        while state["dry"] < nprod:
+            hfc.flush()
+            yield
+        # phase 2: quiesce, then re-attach the consumer's window
+        hfc.flush()
+        fab.fence()
+        hfc.rebind(T)
+        state["rebound"] = True
+        yield
+        # phase 4: drain — only post-rebind sends can arrive (the old
+        # incarnation's ring died with the detach)
+        while state["recv_post"] < nprod:
+            hfc.flush()
+            for m in hfc.recv(T, None):
+                val = int(np.asarray(m["payload"]).ravel()[0])
+                if val < 1000:
+                    raise ConformanceError(
+                        spec, sched.events,
+                        f"pre-rebind payload {val} delivered into the "
+                        "re-attached ring")
+                state["recv_post"] += 1
+            yield
+
+    for r in range(nprod):
+        sched.spawn(f"rank{r:04d}", producer(r))
+    sched.spawn("driver", driver())
+    report = sched.run()
+
+    if state["recv_post"] != state["sent_post"] or state["sent_post"] != nprod:
+        raise ConformanceError(
+            spec, sched.events,
+            f"post-rebind: {state['sent_post']} credited sends, "
+            f"{state['recv_post']} received (all {nprod} must survive)")
+    if hfc.rebinds != nprod:
+        raise ConformanceError(
+            spec, sched.events,
+            f"{hfc.rebinds} producer rebases != {nprod} producers — a "
+            "stale grant was max()-ed instead of rebased")
+    return {"protocol": "rebind", **report, **state,
+            "rebinds": hfc.rebinds, "refreshes": hfc.refreshes,
+            "chaos": fab.chaos_stats()}
+
+
+# ======================================================================
 # suite driver + CLI
 # ======================================================================
 PROTOCOLS = {
@@ -855,6 +1252,8 @@ PROTOCOLS = {
     "lock": run_lock,
     "kv": run_kv,
     "serve": run_serve,
+    "rendezvous": run_rendezvous,
+    "rebind": run_rebind,
 }
 
 
@@ -957,7 +1356,9 @@ def run_suite(protocols, n_ranks: int, schedules, seeds,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="run the simulated-fabric conformance suite")
-    ap.add_argument("--protocols", default="queue,flow,heap,epoch,lock,serve")
+    ap.add_argument("--protocols",
+                    default="queue,flow,heap,epoch,lock,serve,"
+                            "rendezvous,rebind")
     ap.add_argument("--ranks", type=int, default=256)
     ap.add_argument("--schedules", default="reorder,delay,duplicate")
     ap.add_argument("--seeds", default="0")

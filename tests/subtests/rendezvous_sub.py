@@ -1,0 +1,135 @@
+"""Multi-device: get-based rendezvous pull path (DESIGN.md §16).
+
+The decoder must produce EXACTLY the tokens the eager push path produces —
+with zero payload bytes through the ring (descriptors only, 4 wire
+transfers per step: 3 gets + 1 put), refcount conservation across an
+interrupted pull (the puller dies holding pins → cancel reclaims every
+page), stall-reason attribution on DrainError, and a `_stalled` ledger
+that is EMPTY after every successful drain in all three modes (the
+leak regression: terminal transitions must clear it)."""
+import jax
+import numpy as np
+
+from repro.serve.disagg import DisaggConfig, DisaggEngine
+from repro.serve.engine import DrainError
+
+n = len(jax.devices())
+mesh = jax.make_mesh((n,), ("serve",))
+
+base = dict(n_prefill=n // 2, block_tokens=32, d_model=8, vocab=64,
+            queue_capacity=8, max_recv_per_step=2, n_lanes=2, flow=True,
+            page_tokens=8, pool_pages=64, novel_slots=4)
+
+rng = np.random.RandomState(0)
+prompts = {i: rng.randint(0, 64, size=32) for i in range(24)}
+# a duplicate prompt: correctness must hold whether or not the owner-local
+# prefix index happens to share pages (pages may already be released)
+prompts[n // 2] = prompts[0].copy()
+
+
+def run(transport, **kw):
+    eng = DisaggEngine(mesh, "serve",
+                       DisaggConfig(**{**base, "transport": transport, **kw}),
+                       seed=3)
+    for rid, toks in prompts.items():
+        eng.submit(rid, toks)
+    return eng, eng.run_until_drained()
+
+# ---- pull == push, token for token, against the single-host reference ----
+eng_r, res_r = run("rendezvous")
+eng_e, res_e = run("eager")
+assert eng_r.mode == "rendezvous" and eng_r.transport_selected == "rendezvous"
+ref = {rid: eng_r.reference(toks) for rid, toks in prompts.items()}
+assert res_r == ref, "rendezvous tokens diverged from reference"
+assert res_r == res_e, "pull path diverged from eager push"
+
+# ---- the headline wire invariant: the ring moved NO payload --------------
+rs = eng_r.rendezvous_stats()
+assert rs["ring_payload_appends"] == 0, rs
+assert rs["descriptor_appends"] == len(prompts), rs
+assert rs["descriptor_bytes"] == len(prompts) * eng_r.cfg.table_nbytes
+assert rs["pulled_pages"] == len(prompts) * eng_r.cfg.pages_per_block \
+    - rs["prefix_hits"], rs
+assert rs["pins_outstanding"] == 0 and rs["pool_conservation_ok"], rs
+# wire fingerprint: descriptor put + fused pull (id scatter, payload reply,
+# refcount AMO) = 4 one-sided transfers; eager stays at its fused 2
+assert eng_r.msg_stats["wire_msgs_per_step"] == 4, eng_r.msg_stats
+assert eng_e.msg_stats["wire_msgs_per_step"] == 2, eng_e.msg_stats
+# every page released after the drain: pools completely free again
+assert all(c["live"] == 0
+           for c in eng_r.kv.conservation()["per_owner"].values())
+print(f"PASS rendezvous pull == eager push: {len(res_r)} tokens; "
+      f"payload appends 0, {rs['descriptor_appends']} descriptors "
+      f"({rs['descriptor_bytes']} B), {rs['pulled_pages']} pages pulled, "
+      f"hits={rs['prefix_hits']}")
+
+# ---- `_stalled` never leaks: empty after drain in every mode -------------
+eng_l, res_l = run("eager", flow=False)
+assert res_l == ref
+for name, eng in (("rendezvous", eng_r), ("flow", eng_e), ("legacy", eng_l)):
+    assert eng._stalled == {}, (name, eng._stalled)
+print("PASS _stalled ledger empty after drain (rendezvous, flow, legacy)")
+
+# ---- interrupted pull: cancel a rid that is holding pull pins ------------
+# one decode rank with a 1-wide drain: descriptors queue in its ring, so
+# published-but-not-pulled requests exist across step boundaries
+cfgi = DisaggConfig(**{**base, "transport": "rendezvous",
+                       "n_prefill": n - 1, "max_recv_per_step": 1,
+                       "n_lanes": 1})
+engi = DisaggEngine(mesh, "serve", cfgi, seed=3)
+for rid, toks in prompts.items():
+    engi.submit(rid, toks)
+for _ in range(32):
+    engi.step()
+    live = {rid for rid in engi._pins if rid not in engi.results}
+    if live:
+        break
+assert live, "no pin window materialized — config no longer queues descriptors"
+victim = min(live)
+n_pins = len(engi._pins[victim])
+assert engi.cancel(victim)
+assert victim not in engi._pins
+# the dead pull's pages are reclaimable RIGHT NOW: no refs leaked
+assert engi.kv.conservation()["ok"], engi.kv.conservation()
+resi = engi.run_until_drained()
+assert victim not in resi           # a stale token must not masquerade
+for rid, toks in prompts.items():
+    if rid != victim:
+        assert resi[rid] == ref[rid], rid
+assert engi._stalled == {} and engi._pins == {}
+assert all(c["live"] == 0
+           for c in engi.kv.conservation()["per_owner"].values())
+print(f"PASS interrupted pull: cancelled rid {victim} holding {n_pins} pins; "
+      f"conservation OK, {len(resi)} others drained token-identical")
+
+# ---- DrainError carries per-rid stall reasons ----------------------------
+engd = DisaggEngine(mesh, "serve",
+                    DisaggConfig(**{**base, "transport": "rendezvous"}),
+                    seed=3)
+for rid, toks in prompts.items():
+    engd.submit(rid, toks)
+try:
+    engd.run_until_drained(max_steps=2)
+except DrainError as e:
+    assert e.undrained == tuple(sorted(set(prompts) - set(engd.results))), e
+    assert set(e.reasons) == set(e.undrained)
+    assert set(e.reasons.values()) <= {"credit", "pool", "pull", "queue"}, e.reasons
+    assert "pull" in e.reasons.values() or "queue" in e.reasons.values()
+    assert engd._stalled == {}          # the ledger is consumed, not leaked
+    print(f"PASS drain reasons: {len(e.undrained)} undrained, "
+          f"reasons={sorted(set(e.reasons.values()))}")
+else:
+    raise AssertionError("run_until_drained returned despite max_steps=2")
+
+# ---- tiny pool: rendezvous backpressure stalls, never deadlocks ----------
+# one block's worth of pages per owner, many producers funneling into ONE
+# slow decoder: descriptors queue, pulls lag, and the next job at a rank
+# must WAIT for the pull to release the previous block's pages
+engp, resp = run("rendezvous", pool_pages=4, novel_slots=1,
+                 n_prefill=n - 1, max_recv_per_step=1, n_lanes=1)
+assert resp == ref
+assert engp.pool_stalls > 0, engp.pool_stalls
+assert engp.rendezvous_stats()["pool_conservation_ok"]
+assert engp._stalled == {}
+print(f"PASS rendezvous pool backpressure: pool_stalls={engp.pool_stalls}, "
+      f"all {len(resp)} served through 4-page pools")

@@ -37,3 +37,7 @@ def test_credit_flow_control():
 
 def test_rmem_page_pool():
     run_subtest("rmem_sub.py", devices=8)
+
+
+def test_rendezvous_pull_serving():
+    run_subtest("rendezvous_sub.py", devices=8)

@@ -1,0 +1,256 @@
+"""Get-based rendezvous pull path (DESIGN.md §16): descriptor lanes, the
+eager/rendezvous crossover model and its exact bisection flips, transport
+auto-selection, the pull-side pin/unpin liveness contract, the attach-id
+refresh guard after an elastic rebind — plus the conformance protocols
+(`rendezvous`, `rebind`) and the torn-descriptor fault that MUST be caught.
+The 8-device SPMD engine path rides in `test_distributed`."""
+
+import numpy as np
+import pytest
+
+from repro.core.perfmodel import DEFAULT_MODEL
+from repro.parallel.overlap import CollectiveStrategist
+from repro.rmaq.channel import ChannelError, Lane
+from repro.rmaq.flow import HostFlowChannel
+from repro.rmem.heap import HeapError, HostPagePool
+from repro.serve.disagg import DisaggConfig, resolve_transport
+from repro.serve.engine import DrainError
+from repro.sim.conformance import ConformanceError, run_one
+
+from .helpers import given, settings, st
+
+
+# ------------------------------------------------------------- lane kinds
+class TestLaneKinds:
+    def test_descriptor_lane_round_trip(self):
+        """A descriptor-kind lane travels the same ring as payload lanes
+        and comes back tagged: `recv` messages carry the lane's kind, and
+        the flow channel ledgers the send under the descriptor column."""
+        fc = HostFlowChannel(
+            2, 8,
+            [Lane("kv", (2,), "float32"),
+             Lane("desc", (2,), "int32", kind="descriptor")])
+        assert fc.send(1, "desc", np.int32([7, 3]), tag=0, dest=0)
+        assert fc.send(1, "kv", np.float32([1.0, 2.0]), tag=1, dest=0)
+        fc.flush()
+        msgs = fc.recv(0)
+        by_lane = {m["lane"]: m for m in msgs}
+        assert by_lane["desc"]["kind"] == "descriptor"
+        assert by_lane["kv"]["kind"] == "payload"
+        assert [int(x) for x in by_lane["desc"]["payload"]] == [7, 3]
+        assert fc.sends_by_kind == {"payload": 1, "descriptor": 1}
+        assert fc.bytes_by_kind["descriptor"] == fc.ring_slot_nbytes()
+
+    def test_default_kind_is_payload(self):
+        assert Lane("kv", (1,), "float32").kind == "payload"
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ChannelError, match="kind"):
+            HostFlowChannel(2, 8, [Lane("x", (1,), "float32", kind="bulk")])
+
+
+# ------------------------------------------- crossover model + bisections
+class TestCrossoverModel:
+    def test_rendezvous_slope_is_flatter(self):
+        """Eager pays the ring bounce (copy out of the slot, copy into the
+        pool: 4/hbm slope); rendezvous moves only the descriptor through
+        the ring (2/hbm slope).  The cost gap must grow with block size."""
+        m = DEFAULT_MODEL
+        gap = [m.p_append_eager(b) - m.p_append_rendezvous(b, 16)
+               for b in (2**20, 4 * 2**20, 16 * 2**20)]
+        assert gap[0] < gap[1] < gap[2]
+
+    def test_three_regimes_at_ppb16(self):
+        m = DEFAULT_MODEL
+        for b in (1024, 64 * 1024):
+            assert m.select_transfer_protocol(b, 16) == "eager", b
+        for b in (2**20, 4 * 2**20):
+            assert m.select_transfer_protocol(b, 16) == "rendezvous", b
+        for b in (16 * 2**20, 64 * 2**20):
+            assert m.select_transfer_protocol(b, 16) == "paged", b
+
+    def test_high_reuse_prefers_paged(self):
+        # shared pages never cross the wire, so reuse pays for the table
+        m = DEFAULT_MODEL
+        assert m.select_transfer_protocol(2 * 2**20, 16, 0.0) == "rendezvous"
+        assert m.select_transfer_protocol(2 * 2**20, 16, 0.9) == "paged"
+
+    @settings(deadline=None, max_examples=20)
+    @given(st.sampled_from([4, 8, 16, 64]))
+    def test_rendezvous_crossover_flip_exact(self, ppb):
+        """The bisection contract: one tol either side of the returned
+        byte count, the pairwise eager-vs-rendezvous winner flips."""
+        m = DEFAULT_MODEL
+        b = m.rendezvous_crossover_bytes(ppb, tol=1.0)
+        assert 8.0 < b < 64 * 2**20          # interior: a real crossover
+        assert m.p_append_rendezvous(b - 2, ppb) > m.p_append_eager(b - 2)
+        assert m.p_append_rendezvous(b + 2, ppb) <= m.p_append_eager(b + 2)
+
+    @settings(deadline=None, max_examples=20)
+    @given(st.sampled_from([16 * 1024, 64 * 1024, 256 * 1024]),
+           st.sampled_from([4, 8, 16]))
+    def test_paged_crossover_reuse_flip_exact(self, block_bytes, ppb):
+        """The satellite fix: bisection (not the old 1% grid) makes the
+        reuse crossover exact — `select_kv_transport` flips within eps of
+        the returned fraction whenever it is interior."""
+        m = DEFAULT_MODEL
+        f = m.paged_crossover_reuse(block_bytes, ppb)
+        assert 0.0 <= f <= 1.0
+        if 0.0 < f < 1.0:
+            eps = 1e-5
+            assert m.select_kv_transport(block_bytes, ppb, f - eps) == "inline"
+            assert m.select_kv_transport(block_bytes, ppb, f + eps) == "paged"
+
+    def test_transfer_plan_surfaces_model(self):
+        plan = CollectiveStrategist().transfer_plan(2 * 2**20, 16, 0.0)
+        assert plan["protocol"] == "rendezvous"
+        assert plan["rendezvous_s"] < plan["eager_s"]
+        assert plan["crossover_bytes"] == pytest.approx(
+            DEFAULT_MODEL.rendezvous_crossover_bytes(16))
+        assert set(plan) == {"protocol", "eager_s", "rendezvous_s",
+                             "paged_s", "crossover_bytes"}
+
+
+# -------------------------------------------------------- auto-selection
+def _cfg(**kw):
+    base = dict(n_prefill=2, block_tokens=8, d_model=16, vocab=64,
+                queue_capacity=8, max_recv_per_step=2, n_lanes=1, flow=True)
+    base.update(kw)
+    return DisaggConfig(**base)
+
+
+class TestResolveTransport:
+    def test_explicit_passthrough(self):
+        assert resolve_transport(_cfg(transport="eager")) == "eager"
+        assert resolve_transport(_cfg(transport="rendezvous")) == "rendezvous"
+
+    def test_auto_small_block_stays_eager(self):
+        cfg = _cfg(transport="auto", page_tokens=4)
+        assert cfg.block_nbytes < DEFAULT_MODEL.rendezvous_crossover_bytes(
+            cfg.pages_per_block)
+        assert resolve_transport(cfg) == "eager"
+
+    def test_auto_large_block_pulls(self):
+        cfg = _cfg(transport="auto", block_tokens=1024, d_model=512,
+                   page_tokens=64, pool_pages=64, novel_slots=4)
+        assert cfg.block_nbytes > DEFAULT_MODEL.rendezvous_crossover_bytes(
+            cfg.pages_per_block)
+        assert resolve_transport(cfg) == "rendezvous"
+
+    def test_rendezvous_requires_flow(self):
+        with pytest.raises(ValueError, match="credit flow control"):
+            _cfg(transport="rendezvous", flow=False)
+
+    def test_transport_and_legacy_paged_exclusive(self):
+        with pytest.raises(ValueError, match="exclusive"):
+            _cfg(transport="auto", paged=True, page_tokens=4,
+                 pool_pages=16, novel_slots=2)
+
+
+# ------------------------------------------------------ DrainError reasons
+class TestDrainErrorReasons:
+    def test_reasons_carried_and_rendered(self):
+        e = DrainError("not drained", (3, 7), reasons={3: "pull", 7: "credit"})
+        assert e.undrained == (3, 7)
+        assert e.reasons == {3: "pull", 7: "credit"}
+        assert "pull" in str(e) and "credit" in str(e)
+
+    def test_reasons_optional(self):
+        e = DrainError("not drained", (1,))
+        assert e.reasons == {}
+
+
+# ------------------------------------------- attach-id guarded refresh
+class TestRefreshGuard:
+    def test_rebind_rebases_stale_credit_cache(self):
+        """The satellite fix: after an elastic leave/join re-attaches a
+        consumer window, a producer's cached (limit, sent) pair describes
+        a ring that no longer exists.  The refresh must detect the attach
+        id bump and REBASE (limit := fresh grant, sent := 0) instead of
+        treating the fresh grant as more headroom on the old counters —
+        the un-guarded merge either over-credits into the new ring or
+        livelocks with sent permanently above any reachable limit."""
+        fc = HostFlowChannel(2, 4, [Lane("kv", (1,), "float32")])
+        # spend the producer's whole window so its cache is maximally stale
+        sent = [fc.send(1, "kv", np.float32([float(i)]), tag=i, dest=0)
+                for i in range(4)]
+        assert sent == [True, True, False, False]
+        fc.flush()
+
+        fc.rebind(0)                       # consumer 0 re-attached: new ring
+        assert fc.rebinds == 0             # discovery happens at refresh time
+
+        # recovery: the next send refreshes, sees the new attach id, rebases
+        assert fc.send(1, "kv", np.float32([42.0]), tag=9, dest=0)
+        assert fc.rebinds == 1
+        fc.flush()
+        msgs = fc.recv(0)
+        assert [float(m["payload"][0]) for m in msgs] == [42.0]  # old ring gone
+        assert fc.rejected == 0
+        # conservation against the REBORN ring: grants cover exactly the
+        # window again (granted - head == capacity)
+        assert fc.conservation(0)["granted_minus_head"] == fc.capacity
+
+    def test_departed_sender_stays_frozen(self):
+        """rebind freezes the DEPARTED producer rank (sent := limit): a
+        zombie task must not spend credits into the reborn ring."""
+        fc = HostFlowChannel(3, 8, [Lane("kv", (1,), "float32")],
+                             n_producers=2)   # producers 0,1; consumer 2
+        assert fc.send(1, "kv", np.float32([1.0]), tag=0, dest=2)
+        fc.rebind(1)                       # rank 1 left and rejoined
+        assert not fc.send(1, "kv", np.float32([2.0]), tag=1, dest=2)
+
+
+# ------------------------------------------------------- pin/unpin liveness
+class TestPullPins:
+    def test_pin_holds_page_live_until_unpin(self):
+        pool = HostPagePool(4, page_words=2, name="pintest")
+        idx = pool.alloc()
+        tag = pool.pin(idx)
+        assert pool.tag_valid(idx, tag)
+        pool.release(idx)                  # producer drops its ref
+        assert pool.live_count() == 1      # pin keeps the page alive
+        assert pool.tag_valid(idx, tag)    # generation unchanged: no reuse
+        assert pool.unpin(idx, tag)        # last ref: unpin frees
+        assert pool.live_count() == 0
+        assert pool.conservation()["free_plus_live"] == pool.n_pages
+
+    def test_stale_tag_unpin_raises(self):
+        pool = HostPagePool(4, page_words=2, name="pintest2")
+        idx = pool.alloc()
+        tag = pool.pin(idx)
+        pool.unpin(idx, tag)
+        pool.release(idx)                  # page freed, generation advances
+        idx2 = pool.alloc()                # same slot, new generation
+        assert idx2 == idx
+        assert not pool.tag_valid(idx, tag)
+        with pytest.raises(HeapError, match="stale tag"):
+            pool.unpin(idx, tag)
+        pool.release(idx2)
+
+    def test_pin_dead_page_raises(self):
+        pool = HostPagePool(2, name="pintest3")
+        idx = pool.alloc()
+        pool.release(idx)
+        with pytest.raises(HeapError, match="dead page"):
+            pool.pin(idx)
+
+
+# --------------------------------------------------- conformance protocols
+class TestConformance:
+    def test_rendezvous_clean_schedules(self):
+        for schedule in ("none", "reorder"):
+            rep = run_one("rendezvous", 32, schedule, seed=0)
+            assert rep["payload_sends"] == 0, rep    # ring carried no KV bytes
+            assert rep["descriptor_sends"] > 0
+            assert rep["pulled"] > 0 and rep["abandoned"] > 0
+
+    def test_rendezvous_tear_is_caught(self):
+        """The fault-injection acceptance: a descriptor notification torn
+        from its payload write must be detected, not silently consumed."""
+        with pytest.raises(ConformanceError, match="torn descriptor"):
+            run_one("rendezvous", 64, "tear", seed=0)
+
+    def test_rebind_protocol_smoke(self):
+        rep = run_one("rebind", 16, "reorder", seed=0)
+        assert rep["rebinds"] == 15        # every producer rebased exactly once

@@ -172,12 +172,17 @@ class TestFabricDiff:
                                                         (1, 1), (1, 3)]
         assert f.stats(2) == {"head": 4, "tail": 5, "enqueued": 5,
                               "dropped_by_me": 0, "notifications": 5,
-                              "refreshes": 3, "deferred": 2, "rejected": 0}
+                              "refreshes": 3, "deferred": 2, "rejected": 0,
+                              "rebinds": 0,
+                              "sends_by_kind": {"payload": 5, "descriptor": 0},
+                              "bytes_by_kind": {"payload": 100, "descriptor": 0}}
         c = f.conservation(2)
         assert c["granted_minus_head"] == c["outstanding_plus_occupancy"] == 4
         snap = f.fabric.snapshot()
-        assert (snap["puts"], snap["gets"], snap["accs"]) == (5, 5, 6)
-        assert snap["raw_msgs"] == 16 and snap["sync_flush_msgs"] == 3
+        # each refresh now reads the target's attach id beside its grant
+        # block (the elastic-rebind guard): 3 refreshes -> 3 extra gets
+        assert (snap["puts"], snap["gets"], snap["accs"]) == (5, 8, 6)
+        assert snap["raw_msgs"] == 19 and snap["sync_flush_msgs"] == 3
 
     def test_host_heap_golden_trace(self):
         from repro.rmem import heap
